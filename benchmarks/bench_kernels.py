@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: interpret-mode correctness-scale timings (CPU —
+wall times are NOT TPU times; the derived column carries the analytic FLOPs
+/ bytes each kernel moves, which is what the roofline consumes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+from repro.kernels.ops import decode_attention, flash_attention, wkv6
+from repro.core.routing_jax import layered_dp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # flash attention: XLA-oracle path timing + analytic flops
+    B, S, Hq, Hkv, D = 1, 512, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.bfloat16)
+    flops = 4 * B * Hq * S * S * D
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = time_fn(lambda: jax.block_until_ready(f(q, k, v)))
+    emit("kernels/attention_ref_xla", us, f"flops={flops:.2e}")
+    us = time_fn(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True, blk_q=128, blk_k=128)))
+    emit("kernels/flash_attention_interpret", us,
+         f"flops={flops:.2e} (interpreter, correctness only)")
+
+    # decode attention: bytes moved = the KV cache once
+    B, S, Hq, Hkv, D = 4, 2048, 8, 2, 64
+    q1 = jax.random.normal(ks[0], (B, Hq, D), jnp.bfloat16)
+    ck = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    cv = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.bfloat16)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    cache_bytes = 2 * B * S * Hkv * D * 2
+    f = jax.jit(lambda *a: ref.decode_attention_ref(*a))
+    us = time_fn(lambda: jax.block_until_ready(f(q1, ck, cv, kv_len)))
+    emit("kernels/decode_ref_xla", us, f"cache_bytes={cache_bytes:.2e}")
+
+    # tropical routing DP (jnp path — the kernel's oracle-equivalent)
+    rng = np.random.default_rng(0)
+    P, L, R = 1024, 36, 256
+    starts = (rng.integers(0, 12, P) * 3).astype(np.int32)
+    ends = np.minimum(starts + rng.choice([3, 6, 9], P), L).astype(np.int32)
+    costs = jnp.asarray(rng.uniform(1, 500, (R, P)), jnp.float32)
+    f = jax.jit(lambda c: layered_dp(jnp.asarray(starts), jnp.asarray(ends),
+                                     c, total_layers=L))
+    us = time_fn(lambda: jax.block_until_ready(f(costs)))
+    emit("kernels/tropical_dp_batched", us,
+         f"{us/R:.2f}us_per_request R={R} P={P}")
+
+    # wkv6 chunked (XLA oracle path at model scale slice)
+    B, S, H, K = 1, 256, 4, 64
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, K))
+    k2 = jax.random.normal(ks[1], (B, S, H, K))
+    v2 = jax.random.normal(ks[2], (B, S, H, K))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) - 2.0)
+    u = 0.3 * jax.random.normal(ks[4], (H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    from repro.models.rwkv6 import wkv6_chunked as wkv6_jnp
+    f = jax.jit(lambda *a: wkv6_jnp(*a, chunk=32))
+    us = time_fn(lambda: jax.block_until_ready(f(r, k2, v2, lw, u, s0)))
+    emit("kernels/wkv6_chunked_xla", us, f"state_flops={2*B*S*H*K*K:.2e}")
+
+
+if __name__ == "__main__":
+    run()

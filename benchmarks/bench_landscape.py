@@ -1,0 +1,40 @@
+"""Paper Fig. 6: peer-selection landscape — (trust, latency) of selected
+peers per algorithm at L_tok = 50."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sim.testbed import build_paper_testbed
+from repro.sim.workload import run_workload, selection_landscape
+
+ALGOS = ["gtrac", "sp", "mr", "naive", "larac"]
+
+
+def run(n_requests: int = 25, seed: int = 13):
+    out = {}
+    for algo in ALGOS:
+        bed = build_paper_testbed(seed=seed)
+        run_workload(bed, algo, 15, l_tok=5, epsilon=0.10)
+        stats = run_workload(bed, algo, n_requests, 50, epsilon=0.10,
+                             request_id_base=10_000)
+        land = selection_landscape(bed, stats)
+        if len(land["trust"]):
+            hp = float(np.mean(land["profile"] == "honeypot"))
+            emit(f"landscape/{algo}", 0.0,
+                 f"mean_trust={land['trust'].mean():.3f} "
+                 f"mean_lat={land['latency_ms'].mean():.0f}ms "
+                 f"honeypot_frac={hp:.2f}")
+        out[algo] = land
+    sp_hp = float(np.mean(out["sp"]["profile"] == "honeypot")) \
+        if len(out["sp"]["trust"]) else 0
+    g_hp = float(np.mean(out["gtrac"]["profile"] == "honeypot")) \
+        if len(out["gtrac"]["trust"]) else 1
+    emit("landscape/claims", 0.0,
+         f"sp_attracted_to_honeypots:{sp_hp > g_hp} "
+         f"gtrac_high_trust:{out['gtrac']['trust'].mean() > 0.95}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

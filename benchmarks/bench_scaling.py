@@ -1,0 +1,65 @@
+"""Paper Fig. 7: routing decision time vs network size N (exact algorithms,
+100 trials each) — plus the beyond-paper batched TPU-style router."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GTRACConfig
+from repro.core.routing import (gtrac_route, larac_route, mr_route,
+                                naive_route, sp_route)
+from repro.core.routing_jax import route_batched
+from repro.sim.testbed import build_scaling_testbed
+
+SIZES = [50, 100, 200, 500, 1000]
+
+
+def run(trials: int = 100, seed: int = 0):
+    cfg = GTRACConfig()
+    rng = np.random.default_rng(seed)
+    for n in SIZES:
+        bed = build_scaling_testbed(n, cfg=cfg, seed=seed)
+        t = bed.anchor.snapshot(0.0)
+        algos = {
+            "gtrac": lambda: gtrac_route(t, bed.total_layers, cfg, tau=0.8),
+            "sp": lambda: sp_route(t, bed.total_layers, cfg),
+            "mr": lambda: mr_route(t, bed.total_layers, cfg),
+            "larac": lambda: larac_route(t, bed.total_layers, cfg,
+                                         epsilon=0.2),
+            # unbounded DFS (§VI-E) with the paper's 2 s timeout semantics
+            "naive": lambda: naive_route(t, bed.total_layers, cfg, rng=rng,
+                                         limit=None, deadline_s=2.0),
+        }
+        for name, fn in algos.items():
+            reps = trials if name != "naive" else max(2, trials // 50)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            emit(f"scaling/{name}/N{n}", us, f"{us/1e3:.3f}ms")
+    # paper claims at N=1000
+    bed = build_scaling_testbed(1000, cfg=cfg, seed=seed)
+    t = bed.anchor.snapshot(0.0)
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        gtrac_route(t, bed.total_layers, cfg, tau=0.8)
+    g_ms = (time.perf_counter() - t0) / trials * 1e3
+    emit("scaling/claims", g_ms * 1e3,
+         f"gtrac_below_10ms_at_N1000:{g_ms < 10.0}")
+
+    # beyond-paper: batched device router (R requests in one call)
+    for R in (64, 512):
+        taus = np.full(R, 0.8)
+        route_batched(t, bed.total_layers, cfg, taus, k_max=12)  # compile
+        t0 = time.perf_counter()
+        for _ in range(10):
+            route_batched(t, bed.total_layers, cfg, taus, k_max=12)
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        emit(f"scaling/batched/R{R}/N1000", us,
+             f"{us/R:.1f}us_per_request")
+
+
+if __name__ == "__main__":
+    run()

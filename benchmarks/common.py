@@ -1,0 +1,29 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_fn(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only ssr,scaling] [--quick]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit, header
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: ssr,latency,chain,"
+                         "landscape,scaling,feasibility,kernels")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller request counts (CI mode)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_chain_length, bench_feasibility,
+                            bench_kernels, bench_landscape, bench_scaling,
+                            bench_ssr, bench_token_latency)
+
+    suites = {
+        "ssr": lambda: bench_ssr.run(n_requests=20 if args.quick else 60,
+                                     warmup=10 if args.quick else 20),
+        "latency": lambda: bench_token_latency.run(
+            n_requests=15 if args.quick else 50),
+        "chain": lambda: bench_chain_length.run(
+            n_requests=15 if args.quick else 40),
+        "landscape": lambda: bench_landscape.run(
+            n_requests=10 if args.quick else 25),
+        "scaling": lambda: bench_scaling.run(
+            trials=20 if args.quick else 100),
+        "feasibility": bench_feasibility.run,
+        "kernels": bench_kernels.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+
+    header()
+    t0 = time.time()
+    failures = 0
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            t1 = time.time()
+            fn()
+            emit(f"suite/{name}", (time.time() - t1) * 1e6, "done")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            emit(f"suite/{name}", 0.0, f"FAILED:{type(e).__name__}:{e}")
+    emit("suite/total", (time.time() - t0) * 1e6,
+         f"failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""END-TO-END DRIVER: serve a small model with batched requests through the
+full G-TRAC stack, comparing routing policies under adversarial peers.
+
+This is the paper's system running for real: the model is layer-sharded
+across simulated edge peers (honeypot / turtle / golden profiles), every
+token's chain is routed from the seeker's gossip-synced cached view, hops
+execute REAL jitted stage computations, failures trigger Bounded One-Shot
+Repair, and the Anchor learns trust from execution reports.
+
+    PYTHONPATH=src python examples/serve_gtrac.py [--requests 12] [--tokens 12]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving.gtrac_serve import GTRACPipelineServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--layers-per-stage", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("gpt2-large").reduced(num_layers=8, vocab_size=512,
+                                           remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    replicas = {"honeypot": 3, "turtle": 2, "golden": 2}
+
+    print(f"model: {cfg.num_layers} layers, "
+          f"{cfg.num_layers // args.layers_per_stage} pipeline stages, "
+          f"peers/stage: {sum(replicas.values())} {replicas}")
+    print(f"{'policy':8s} {'SSR':>6s} {'tok/s-lat':>10s} {'repairs':>8s} "
+          f"{'failures':>9s}")
+
+    for algo in ("gtrac", "sp", "mr"):
+        srv = GTRACPipelineServer(cfg, params,
+                                  layers_per_stage=args.layers_per_stage,
+                                  replicas=replicas, algorithm=algo,
+                                  seed=args.seed)
+        ok = repairs = failures = 0
+        lats = []
+        for rid in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size, size=8)
+            out, met = srv.generate(prompt, max_new_tokens=args.tokens,
+                                    request_id=rid)
+            ok += met.tokens == args.tokens
+            repairs += met.repairs
+            failures += met.failures
+            lats.extend(met.token_latency_ms)
+        lat_s = np.mean(lats) / 1e3 if lats else float("nan")
+        print(f"{algo:8s} {ok/args.requests:6.2f} {lat_s:9.2f}s "
+              f"{repairs:8d} {failures:9d}")
+
+    print("\nexpected: gtrac matches mr's reliability at the lowest latency;"
+          "\nsp keeps picking honeypots — at this small scale the one-shot"
+          "\nrepair often rescues it, but at ~3x the per-token latency and"
+          "\nan order of magnitude more repairs (the paper-scale SSR gap is"
+          "\nin benchmarks/bench_ssr.py: sp < 0.15 vs gtrac ~= 1.0).")
+
+
+if __name__ == "__main__":
+    main()

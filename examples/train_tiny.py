@@ -1,0 +1,33 @@
+"""Train a reduced smollm-family model for a few hundred steps on CPU with
+checkpoint/restart, demonstrating the training substrate end to end.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_tiny")
+    args = ap.parse_args()
+
+    # phase 1: half the steps, then simulate a crash (process would exit)
+    half = max(1, args.steps // 2)
+    print(f"=== phase 1: steps 1..{half} ===")
+    train_main(["--arch", "smollm-360m", "--reduced",
+                "--steps", str(half), "--seq", "128", "--batch", "8",
+                "--ckpt-every", "25", "--ckpt-dir", args.ckpt_dir])
+
+    # phase 2: restart from the latest checkpoint and finish
+    print(f"=== phase 2 (restart): steps {half+1}..{args.steps} ===")
+    train_main(["--arch", "smollm-360m", "--reduced",
+                "--steps", str(args.steps), "--seq", "128", "--batch", "8",
+                "--ckpt-every", "25", "--ckpt-dir", args.ckpt_dir,
+                "--resume"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Feedback-driven chain execution with Bounded One-Shot Repair (Alg. 1).
+
+``ChainExecutor`` is generic over the hop function so the same Alg. 1
+semantics drive both the simulator (Bernoulli peer failures, §V-A) and real
+JAX stage execution (serving/gtrac_serve.py):
+
+    hop_fn(peer_id, stage_index, payload) -> (payload', latency_ms, ok)
+
+On hop failure with repair enabled, the executor queries the trusted set for
+the minimum-latency replacement hosting the SAME layer segment (line 10) and
+retries the failed hop exactly once; intermediate progress x_{k-1} is never
+discarded. Unbounded retries are deliberately not offered (§IV-C: bounded
+corrective action preserves failure attribution and risk semantics).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import GTRACConfig
+from repro.core.types import ExecReport, HopReport, PeerTable
+
+HopFn = Callable[[int, int, object], Tuple[object, float, bool]]
+
+
+def find_replacement(table: PeerTable, failed_idx: int, tau: float,
+                     exclude: Optional[set] = None) -> Optional[int]:
+    """Line 10: argmin_{p∈V'} { l̂_p | p != p_fail ∧ LAYERS(p) = LAYERS(p_fail) }."""
+    seg = (table.layer_start[failed_idx], table.layer_end[failed_idx])
+    mask = (table.alive
+            & (table.trust >= tau)
+            & (table.layer_start == seg[0])
+            & (table.layer_end == seg[1]))
+    mask[failed_idx] = False
+    if exclude:
+        for i in exclude:
+            mask[i] = False
+    cand = np.nonzero(mask)[0]
+    if len(cand) == 0:
+        return None
+    return int(cand[np.argmin(table.latency_ms[cand])])
+
+
+class ChainExecutor:
+    def __init__(self, cfg: GTRACConfig, hop_fn: HopFn):
+        self.cfg = cfg
+        self.hop_fn = hop_fn
+
+    def execute(self, chain: List[int], table: PeerTable,
+                payload: object = None,
+                tau: Optional[float] = None) -> Tuple[ExecReport, object]:
+        """Run the chain; Alg. 1 lines 7–15. Returns (report, final payload)."""
+        tau = self.cfg.trust_floor if tau is None else tau
+        hops: List[HopReport] = []
+        total_ms = 0.0
+        repaired = False
+        repair_peer = None
+        exec_chain = list(chain)
+
+        k = 0
+        while k < len(exec_chain):
+            pid = exec_chain[k]
+            payload_out, lat_ms, ok = self.hop_fn(pid, k, payload)
+            hops.append(HopReport(pid, lat_ms, ok))
+            total_ms += lat_ms
+            if ok:
+                payload = payload_out
+                k += 1
+                continue
+            # ---- hop failure ----
+            if repaired or not self.cfg.repair_enabled:
+                return ExecReport(False, exec_chain, hops, failed_peer=pid,
+                                  repaired=repaired, repair_peer=repair_peer,
+                                  total_latency_ms=total_ms), payload
+            try:
+                fidx = table.index_of(pid)
+            except KeyError:
+                fidx = None
+            ridx = (find_replacement(table, fidx, tau)
+                    if fidx is not None else None)
+            if ridx is None:
+                return ExecReport(False, exec_chain, hops, failed_peer=pid,
+                                  total_latency_ms=total_ms), payload
+            # SWAPNODE + one-shot retry of the SAME step (progress kept)
+            repaired = True
+            repair_peer = int(table.peer_ids[ridx])
+            exec_chain[k] = repair_peer
+            # loop continues at the same k with the swapped peer
+
+        return ExecReport(True, exec_chain, hops,
+                          repaired=repaired, repair_peer=repair_peer,
+                          total_latency_ms=total_ms), payload
+
+
+def split_reports(report: ExecReport) -> List[ExecReport]:
+    """Decompose an execution trace into per-outcome reports for the Anchor.
+
+    Repair semantics (§IV-C): the ORIGINAL failing hop is penalised even when
+    the one-shot repair subsequently rescues the request; successful chains
+    reward exactly the peers that ran.
+    """
+    out: List[ExecReport] = []
+    failed_hops = [h for h in report.hops if not h.success]
+    for h in failed_hops:
+        out.append(ExecReport(False, report.chain, [h], failed_peer=h.peer_id))
+    if report.success:
+        ok_peers = [h.peer_id for h in report.hops if h.success]
+        out.append(ExecReport(True, ok_peers,
+                              [h for h in report.hops if h.success]))
+    return out

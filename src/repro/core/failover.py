@@ -1,0 +1,101 @@
+"""Anchor replication and failover.
+
+The paper's Hybrid Trust Architecture places the global registry on ONE
+stable anchor (§III-A) — a single point of failure at 1000+ node scale.
+``ReplicatedAnchor`` runs a primary + N backups with asynchronous state
+replication on the gossip cadence: every ``apply_report``/heartbeat goes to
+the primary; backups pull snapshots in the background (the same staleness
+model as seeker caches, so failover loses at most T_sync of trust updates —
+which the trust protocol tolerates by design: updates are idempotent
+increments and liveness re-establishes via heartbeats within T_hb).
+
+Failover: when the primary misses ``primary_ttl`` of liveness probes, the
+first live backup is promoted; seekers keep routing from their caches
+throughout (the control plane is off the critical path — the paper's own
+argument makes the failover invisible to in-flight inference).
+"""
+from __future__ import annotations
+
+import copy
+from typing import List, Optional
+
+from repro.configs.base import GTRACConfig
+from repro.core.registry import AnchorRegistry
+from repro.core.types import ExecReport, PeerTable
+
+
+class ReplicatedAnchor:
+    """Primary/backup anchor group with async snapshot replication."""
+
+    def __init__(self, cfg: GTRACConfig, n_backups: int = 2,
+                 sync_period_s: Optional[float] = None,
+                 primary_ttl_s: Optional[float] = None):
+        self.cfg = cfg
+        self.replicas: List[AnchorRegistry] = [
+            AnchorRegistry(cfg) for _ in range(1 + n_backups)]
+        self.primary_idx = 0
+        self.alive = [True] * (1 + n_backups)
+        self.sync_period_s = sync_period_s or cfg.gossip_period_s
+        self.primary_ttl_s = primary_ttl_s or cfg.node_ttl_s
+        self._last_sync = 0.0
+        self._last_primary_seen = 0.0
+        self.failovers = 0
+
+    # -- the AnchorRegistry surface (delegated to the primary) ---------------
+
+    @property
+    def primary(self) -> AnchorRegistry:
+        return self.replicas[self.primary_idx]
+
+    def register(self, *a, **kw):
+        return self.primary.register(*a, **kw)
+
+    def deregister(self, *a, **kw):
+        return self.primary.deregister(*a, **kw)
+
+    def heartbeat(self, peer_id: int, now: float) -> None:
+        self.primary.heartbeat(peer_id, now)
+        self._last_primary_seen = now
+
+    def apply_report(self, report: ExecReport) -> None:
+        self.primary.apply_report(report)
+
+    def snapshot(self, now: float) -> PeerTable:
+        return self.primary.snapshot(now)
+
+    def reset_trust(self) -> None:
+        self.primary.reset_trust()
+
+    @property
+    def peers(self):
+        return self.primary.peers
+
+    # -- replication & failover ------------------------------------------------
+
+    def tick(self, now: float) -> None:
+        """Background replication: backups copy the primary's state."""
+        if now - self._last_sync < self.sync_period_s:
+            return
+        self._last_sync = now
+        if not self.alive[self.primary_idx]:
+            return
+        state = copy.deepcopy(self.primary.peers)
+        for i, rep in enumerate(self.replicas):
+            if i != self.primary_idx and self.alive[i]:
+                rep.peers = copy.deepcopy(state)
+
+    def crash_primary(self) -> None:
+        self.alive[self.primary_idx] = False
+
+    def maybe_failover(self, now: float) -> bool:
+        """Promote the first live backup if the primary is down/expired."""
+        expired = (not self.alive[self.primary_idx]) or \
+            (now - self._last_primary_seen > self.primary_ttl_s)
+        if not expired:
+            return False
+        for i, ok in enumerate(self.alive):
+            if ok and i != self.primary_idx:
+                self.primary_idx = i
+                self.failovers += 1
+                return True
+        raise RuntimeError("no live anchor replica to promote")

@@ -1,0 +1,134 @@
+"""Hybrid Trust Architecture (paper §IV-A).
+
+``AnchorRegistry`` is the control-plane authority: it owns the global
+registry Σ_t = {(p, c_p, r_p, l̂_p)}, ingests heartbeats, and applies
+execution reports (trust/latency feedback). ``SeekerCache`` is the
+seeker-side *stale* view Σ̃_t, refreshed by background synchronisation every
+``T_gossip`` — never synchronously on the request path. Routing always reads
+the cache, which is what decouples control-plane latency from the inference
+critical path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.configs.base import GTRACConfig
+from repro.core import trust as T
+from repro.core.types import ExecReport, PeerRecord, PeerTable
+
+
+class AnchorRegistry:
+    """Stable infrastructure anchor — control plane only, never on the
+    data path (§III-A)."""
+
+    def __init__(self, cfg: GTRACConfig):
+        self.cfg = cfg
+        self.peers: Dict[int, PeerRecord] = {}
+
+    # -- membership --------------------------------------------------------
+
+    def register(self, peer_id: int, layer_start: int, layer_end: int,
+                 now: float = 0.0, profile: str = "",
+                 trust: Optional[float] = None,
+                 latency_ms: Optional[float] = None) -> PeerRecord:
+        rec = PeerRecord(
+            peer_id=peer_id,
+            layer_start=layer_start,
+            layer_end=layer_end,
+            trust=self.cfg.init_trust if trust is None else trust,
+            latency_est_ms=(self.cfg.init_latency_ms
+                            if latency_ms is None else latency_ms),
+            last_heartbeat=now,
+            profile=profile,
+        )
+        self.peers[peer_id] = rec
+        return rec
+
+    def deregister(self, peer_id: int) -> None:
+        self.peers.pop(peer_id, None)
+
+    # -- liveness -----------------------------------------------------------
+
+    def heartbeat(self, peer_id: int, now: float) -> None:
+        if peer_id in self.peers:
+            self.peers[peer_id].last_heartbeat = now
+
+    def heartbeat_all(self, peer_ids: Iterable[int], now: float) -> None:
+        for pid in peer_ids:
+            self.heartbeat(pid, now)
+
+    def live_peers(self, now: float) -> List[PeerRecord]:
+        ttl = self.cfg.node_ttl_s
+        return [r for r in self.peers.values()
+                if (now - r.last_heartbeat) <= ttl]
+
+    # -- feedback (Alg. 1 line 16: UPDATETRUST) ------------------------------
+
+    def apply_report(self, report: ExecReport) -> None:
+        for hop in report.hops:
+            rec = self.peers.get(hop.peer_id)
+            if rec is None:
+                continue
+            if hop.success:
+                rec.latency_est_ms = T.ewma_latency(
+                    rec.latency_est_ms, hop.latency_ms, self.cfg.ewma_beta)
+        if report.success:
+            for pid in report.chain:
+                rec = self.peers.get(pid)
+                if rec is not None:
+                    rec.trust = T.reward(rec.trust, self.cfg)
+                    rec.successes += 1
+        elif report.failed_peer is not None:
+            rec = self.peers.get(report.failed_peer)
+            if rec is not None:
+                rec.trust = T.penalize(rec.trust, self.cfg)
+                rec.failures += 1
+
+    # -- snapshotting --------------------------------------------------------
+
+    def snapshot(self, now: float) -> PeerTable:
+        return PeerTable.from_records(list(self.peers.values()), now,
+                                      self.cfg.node_ttl_s)
+
+    def reset_trust(self) -> None:
+        """Paper §VI-A: trust state is reset between algorithm runs."""
+        for rec in self.peers.values():
+            rec.trust = self.cfg.init_trust
+            rec.latency_est_ms = self.cfg.init_latency_ms
+            rec.successes = rec.failures = 0
+
+
+class SeekerCache:
+    """Seeker-side cached registry view Σ̃_t with background sync (§IV-A)."""
+
+    def __init__(self, anchor: AnchorRegistry, cfg: GTRACConfig,
+                 now: float = 0.0):
+        self.anchor = anchor
+        self.cfg = cfg
+        self.table: PeerTable = anchor.snapshot(now)
+        self.last_sync: float = now
+        self.syncs: int = 0
+
+    def maybe_sync(self, now: float) -> bool:
+        """Background gossip tick: refresh if T_gossip elapsed. Returns
+        whether a sync happened. NEVER called on the critical path by the
+        router — the engine drives it from its clock."""
+        if now - self.last_sync >= self.cfg.gossip_period_s:
+            self.force_sync(now)
+            return True
+        return False
+
+    def force_sync(self, now: float) -> None:
+        self.table = self.anchor.snapshot(now)
+        self.last_sync = now
+        self.syncs += 1
+
+    def view(self) -> PeerTable:
+        """The (stale) table used for routing decisions."""
+        return self.table
+
+    @property
+    def staleness(self) -> float:
+        return self.table.snapshot_time - self.last_sync

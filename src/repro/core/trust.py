@@ -1,0 +1,81 @@
+"""Trust and latency estimation (paper §III-C, §III-D, §IV-C).
+
+Pure update rules used by both the Python control plane (registry.py) and
+the jitted JAX twin (arrays of trust/latency living device-side next to the
+served model — see routing_jax.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GTRACConfig
+
+
+# ---------------------------------------------------------------------------
+# Scalar rules (reference semantics)
+# ---------------------------------------------------------------------------
+
+
+def ewma_latency(prev_ms: float, observed_ms: float, beta: float) -> float:
+    """Eq. (3): l̂_p(t) = (1-β) l̂_p(t-1) + β l_obs."""
+    return (1.0 - beta) * prev_ms + beta * observed_ms
+
+
+def effective_cost(latency_ms: float, trust: float,
+                   timeout_ms: float) -> float:
+    """Eq. (4): C_p = l̂_p + (1 - r_p) · T_timeout."""
+    return latency_ms + (1.0 - trust) * timeout_ms
+
+
+def reward(trust: float, cfg: GTRACConfig) -> float:
+    """Success: every chain peer earns Δr⁺ (targeted attribution, §IV-C)."""
+    return min(cfg.max_trust, trust + cfg.trust_reward)
+
+
+def penalize(trust: float, cfg: GTRACConfig) -> float:
+    """Failure: ONLY the failing hop loses Δr⁻."""
+    return max(cfg.min_trust, trust - cfg.trust_penalty)
+
+
+# ---------------------------------------------------------------------------
+# Vectorised twins (numpy; used on PeerTable snapshots)
+# ---------------------------------------------------------------------------
+
+
+def effective_cost_vec(latency_ms: np.ndarray, trust: np.ndarray,
+                       timeout_ms: float) -> np.ndarray:
+    return latency_ms + (1.0 - trust) * timeout_ms
+
+
+def liveness_vec(last_heartbeat: np.ndarray, now: float,
+                 ttl_s: float) -> np.ndarray:
+    return (now - last_heartbeat) <= ttl_s
+
+
+# ---------------------------------------------------------------------------
+# JAX twins (device-resident trust state)
+# ---------------------------------------------------------------------------
+
+
+def jax_apply_report(trust, latency, chain_mask, failed_onehot,
+                     observed_ms, success, cfg: GTRACConfig):
+    """Apply one ExecReport to device-side (trust, latency) arrays.
+
+    trust, latency: (P,) float32; chain_mask: (P,) bool — peers on the chain;
+    failed_onehot: (P,) bool — the failing hop (all-False on success);
+    observed_ms: (P,) per-hop observed latency (0 where not on chain);
+    success: scalar bool.
+    """
+    hop_executed = chain_mask & (observed_ms > 0)
+    new_lat = jnp.where(
+        hop_executed,
+        (1.0 - cfg.ewma_beta) * latency + cfg.ewma_beta * observed_ms,
+        latency)
+    rewarded = jnp.clip(trust + cfg.trust_reward, cfg.min_trust,
+                        cfg.max_trust)
+    penalized = jnp.clip(trust - cfg.trust_penalty, cfg.min_trust,
+                         cfg.max_trust)
+    new_trust = jnp.where(success & chain_mask, rewarded, trust)
+    new_trust = jnp.where((~success) & failed_onehot, penalized, new_trust)
+    return new_trust, new_lat

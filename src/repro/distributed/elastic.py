@@ -1,0 +1,59 @@
+"""Elastic scaling: re-mesh and reshard after device-group loss.
+
+Recovery path for training at 1000+ nodes: when a pod / slice drops out,
+(1) build a smaller mesh from the surviving devices (shrink the ``data``
+axis — TP degree is preserved so weight layouts stay valid), (2) reshard the
+last checkpoint's param/optimizer trees onto it, (3) resume. The serving
+path needs no special handling — G-TRAC's trust/liveness layer routes around
+lost stage replicas (that IS the paper).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import param_pspecs
+
+
+def surviving_mesh(axes: Tuple[str, ...], shape: Tuple[int, ...],
+                   lost_devices: Sequence[int] = (),
+                   devices=None) -> Mesh:
+    """Build the largest mesh with the same axis order after losing devices.
+
+    Shrinks the leading data-like axis (('pod' then) 'data') to fit the
+    survivor count; 'model' size is preserved so parameter layouts (TP
+    degree) are unchanged and restores are pure resharding.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    lost = set(lost_devices)
+    survivors = [d for d in devices if d.id not in lost]
+    shape = list(shape)
+    model_like = int(np.prod(shape[1:]))  # all but the first axis
+    n_groups = len(survivors) // model_like
+    if n_groups < 1:
+        raise RuntimeError(
+            f"cannot rebuild mesh: {len(survivors)} survivors < model "
+            f"degree {model_like}")
+    shape[0] = n_groups
+    n_use = n_groups * model_like
+    dev_array = np.array(survivors[:n_use]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def reshard_params(params, new_mesh: Mesh):
+    """Reshard a param tree onto a new mesh (same logical rules)."""
+    shardings = jax.tree.map(lambda s: NamedSharding(new_mesh, s),
+                             param_pspecs(params))
+    return jax.device_put(params, shardings)
+
+
+def remesh_and_restore(checkpoint_restore_fn, axes, shape,
+                       lost_devices: Sequence[int]):
+    """Full recovery: new mesh + resharded restore from checkpoint."""
+    mesh = surviving_mesh(axes, shape, lost_devices)
+    state = checkpoint_restore_fn()
+    params = reshard_params(state["params"], mesh)
+    return mesh, {**state, "params": params}

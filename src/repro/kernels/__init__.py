@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships with a pure-jnp oracle (ref.py) and is validated in
+interpret mode across shape/dtype sweeps (tests/test_kernels_*.py):
+
+  flash_attention  — blocked causal GQA attention (prefill/train)
+  decode_attention — KV-cache decode attention (memory-bound serve step)
+  tropical_route   — the paper's routing DP as batched min-plus on the MXU
+  rwkv6_chunk      — WKV6 chunked linear-attention scan
+  ssd_chunk        — Mamba2 SSD chunked scan
+"""

@@ -1,0 +1,97 @@
+"""Batched min-plus (tropical) routing DP — Pallas TPU kernel.
+
+This is the paper's Dijkstra-after-pruning, restructured for TPU (DESIGN.md
+§2): on the trust-pruned *layered* DAG the shortest path is one min-plus
+relaxation per layer boundary,
+
+    d[b] = min_p { d[start_p] + C_p  :  end_p == b } ,
+
+and a batch of R concurrent requests (each with its own pruned cost row)
+relaxes in lockstep. The boundary gather ``d[start_p]`` is expressed as a
+dense one-hot matmul ``dist @ S`` (S[j,p] = [start_p == j]) so it runs on
+the MXU instead of a serial gather — the TPU-native trick that makes the
+whole DP two matmuls + a masked min per boundary.
+
+Grid = (R / blk_r,); each program keeps its (blk_r, L+1) distance block and
+predecessor block in VMEM for the entire DP (L ≤ a few hundred boundaries —
+tiny), streaming nothing back to HBM until the end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = 3.0e38  # python literal: jnp scalars may not be captured by kernels
+
+
+def _route_kernel(starts_oh_ref, ends_ref, costs_ref, dist_ref, pred_ref, *,
+                  total_layers: int):
+    L = total_layers
+    S = starts_oh_ref[...]                     # (L+1, P) one-hot f32
+    ends = ends_ref[...]                       # (1, P) i32
+    costs = costs_ref[...]                     # (blk_r, P)
+    blk_r = costs.shape[0]
+
+    dist0 = jnp.full((blk_r, L + 1), INF, jnp.float32)
+    dist0 = dist0.at[:, 0].set(0.0)
+    pred0 = jnp.full((blk_r, L + 1), -1, jnp.int32)
+
+    def body(b, carry):
+        dist, pred = carry
+        # d[start_p] for all p, via MXU: (blk_r, L+1) @ (L+1, P)
+        d_start = jax.lax.dot_general(
+            jnp.minimum(dist, INF), S, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        cand = jnp.where(ends == b, d_start + costs, INF)   # (blk_r, P)
+        best = jnp.min(cand, axis=1)
+        arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+        onehot_b = (jax.lax.iota(jnp.int32, L + 1) == b)[None, :]
+        dist = jnp.where(onehot_b, best[:, None], dist)
+        pred = jnp.where(onehot_b & (best < INF)[:, None], arg[:, None], pred)
+        return dist, pred
+
+    dist, pred = jax.lax.fori_loop(1, L + 1, body, (dist0, pred0))
+    dist_ref[...] = dist
+    pred_ref[...] = pred
+
+
+@functools.partial(jax.jit, static_argnames=("total_layers", "blk_r",
+                                             "interpret"))
+def tropical_route(starts, ends, costs, *, total_layers: int,
+                   blk_r: int = 64, interpret: bool = False):
+    """starts/ends (P,) i32; costs (R, P) f32 (INF = pruned).
+
+    Returns (dist (R, L+1), pred (R, L+1) int32 peer index or -1).
+    """
+    R, P = costs.shape
+    L = total_layers
+    blk_r = min(blk_r, R)
+    assert R % blk_r == 0, (R, blk_r)
+    # one-hot boundary matrix, built once outside the kernel
+    starts_oh = jax.nn.one_hot(starts, L + 1, dtype=jnp.float32).T  # (L+1, P)
+    kernel = functools.partial(_route_kernel, total_layers=L)
+    dist, pred = pl.pallas_call(
+        kernel,
+        grid=(R // blk_r,),
+        in_specs=[
+            pl.BlockSpec((L + 1, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((blk_r, P), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_r, L + 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk_r, L + 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, L + 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, L + 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(starts_oh, ends[None, :].astype(jnp.int32), costs)
+    return dist, pred

@@ -1,0 +1,69 @@
+"""Serving launcher: plain batched engine or G-TRAC trust-routed pipeline.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-large --reduced \
+        --mode gtrac --algorithm gtrac --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.gtrac_serve import GTRACPipelineServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-large")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="gtrac", choices=["engine", "gtrac"])
+    ap.add_argument("--algorithm", default="gtrac",
+                    choices=["gtrac", "sp", "mr", "naive", "larac"])
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--layers-per-stage", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=4)
+    cfg = dataclasses.replace(cfg, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    if args.mode == "engine":
+        eng = ServingEngine(cfg, params)
+        for _ in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size, size=8)
+            eng.submit(prompt, max_new_tokens=args.tokens)
+        done = eng.run_batch()
+        for r in done:
+            print(f"req {r.request_id}: {list(r.prompt)} -> {r.output}")
+        return
+
+    srv = GTRACPipelineServer(cfg, params,
+                              layers_per_stage=args.layers_per_stage,
+                              algorithm=args.algorithm, seed=args.seed)
+    ok = 0
+    for rid in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size, size=8)
+        out, met = srv.generate(prompt, max_new_tokens=args.tokens,
+                                request_id=rid)
+        ok += met.tokens == args.tokens
+        lat = (np.mean(met.token_latency_ms) / 1e3
+               if met.token_latency_ms else float("nan"))
+        print(f"req {rid}: {met.tokens}/{args.tokens} tokens, "
+              f"{met.repairs} repairs, {met.failures} failures, "
+              f"{lat:.2f}s/token -> {list(out)}")
+    print(f"SSR: {ok}/{args.requests}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Mamba2 mixer (SSD — state-space duality), chunked + recurrent forms.
+
+Per-head recurrence (head dim P = ssm_head_dim, state dim N = ssm_state,
+n_groups = 1 so B/C are shared across heads):
+
+    h_t = a_t h_{t-1} + dt_t * (B_t ⊗ x_t)        h: (N, P)
+    y_t = C_t · h_t + D ⊙ x_t
+
+with scalar-per-head decay ``a_t = exp(-exp(A_log) * dt_t)``. The chunked
+form computes the intra-chunk part with a (C, C) per-head decay matrix
+(all exponents non-positive → overflow-safe) and carries state across chunks
+with ``lax.scan`` — the SSD algorithm restructured for the MXU: the inner
+contraction ``(L ⊙ C·Bᵀ) @ (dt·x)`` is a dense matmul chain.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, pdtype, split_keys
+
+CHUNK = 64
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, H, P, N = dims(cfg)
+    conv_ch = d_in + 2 * N
+    ks = split_keys(key, ["in", "out", "conv", "a"])
+    pd = pdtype(cfg)
+    return {
+        "in_proj": dense_init(ks["in"], (d, 2 * d_in + 2 * N + H), dtype=pd),
+        "conv_w": dense_init(ks["conv"], (cfg.ssm_conv_width, conv_ch),
+                             scale=0.1, dtype=pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn_w": jnp.ones((d_in,), pd),               # gated RMSNorm
+        "out_proj": dense_init(ks["out"], (d_in, d), dtype=pd),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, H, P, N = dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def causal_conv(xBC, w, b):
+    """Depthwise causal conv. xBC (B,S,Ch); w (W,Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def conv_step(x_new, conv_state, w, b):
+    """x_new (B,Ch); conv_state (B,W-1,Ch) past inputs."""
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,W,Ch)
+    out = jnp.einsum("bwc,wc->bc", full, w) + b[None, :]
+    return out, full[:, 1:, :]
+
+
+def ssd_chunked(x, dt, la, Bm, Cm, h0, chunk: int = CHUNK):
+    """Chunked SSD scan.
+
+    x (B,S,H,P) f32; dt (B,S,H); la (B,S,H) log-decay (<=0);
+    Bm, Cm (B,S,N); h0 (B,H,N,P). Returns y (B,S,H,P), h_final.
+    """
+    Bz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    r = lambda a: a.reshape(Bz, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    xs, dts, las, Bs, Cs = r(x), r(dt), r(la), r(Bm), r(Cm)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # s <= t
+
+    def body(h, inp):
+        xc, dtc, lac, Bc, Cc = inp
+        cum = jnp.cumsum(lac, axis=1)                       # (B,C,H) inclusive
+        # decay matrix L[t,s] = exp(cum_t - cum_s) for s<=t  (exponent <= 0)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,C,C,H)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("btn,bsn->bts", Cc, Bc)              # (B,C,C)
+        M = G[..., None] * L                                # (B,C,C,H)
+        dx = xc * dtc[..., None]                            # (B,C,H,P)
+        y = jnp.einsum("btsh,bshp->bthp", M, dx)
+        # inter-chunk: y_t += C_t . (exp(cum_t) * h0)
+        dec = jnp.exp(cum)                                  # (B,C,H)
+        y = y + jnp.einsum("btn,bhnp,bth->bthp", Cc, h, dec)
+        # state: h' = exp(cum_last)*h + sum_s exp(cum_last-cum_s) dt_s B_s x_s
+        rdec = jnp.exp(cum[:, -1:, :] - cum)                # (B,C,H)
+        h_new = dec[:, -1][:, :, None, None] * h + \
+            jnp.einsum("bsn,bshp,bsh->bhnp", Bc, dx, rdec)
+        return h_new, y
+
+    h, ys = jax.lax.scan(body, h0, (xs, dts, las, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(Bz, S, H, P)
+    return y, h
+
+
+def ssd_step(x, dt, la, Bm, Cm, h):
+    """One token. x (B,H,P); dt,la (B,H); Bm,Cm (B,N); h (B,H,N,P)."""
+    a = jnp.exp(la)[..., None, None]
+    h = a * h + jnp.einsum("bn,bhp,bh->bhnp", Bm, x, dt)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    return y, h
+
+
+def _gated_rmsnorm(y, z, w, eps=1e-5):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32))
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, x, state=None):
+    """Full-sequence mixer. x (B,S,d) -> (B,S,d), (conv_state, ssm_state)."""
+    from repro.distributed.sharding import constrain
+    Bz, S, d = x.shape
+    d_in, H, P, N = dims(cfg)
+    dt_a = x.dtype
+    proj = constrain(x @ p["in_proj"].astype(dt_a), "batch", "seq", "ff")
+    z, xBC, dt = _split_proj(cfg, proj)
+    if state is not None:
+        conv_state = state[0]
+        # prepend cached conv inputs (only used in segment-continuation mode)
+        xBC_in = jnp.concatenate([conv_state, xBC], axis=1)
+        xBC_conv = causal_conv(xBC_in, p["conv_w"].astype(dt_a),
+                               p["conv_b"].astype(dt_a))[:, conv_state.shape[1]:]
+        h0 = state[1]
+    else:
+        xBC_conv = causal_conv(xBC, p["conv_w"].astype(dt_a),
+                               p["conv_b"].astype(dt_a))
+        h0 = jnp.zeros((Bz, H, N, P), jnp.float32)
+    xBC_conv = jax.nn.silu(xBC_conv)
+    xs = xBC_conv[..., :d_in].reshape(Bz, S, H, P).astype(jnp.float32)
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    Bm = xBC_conv[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = xBC_conv[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    la = -jnp.exp(p["A_log"])[None, None, :] * dt              # (B,S,H)
+    y, h = ssd_chunked(xs, dt, la, Bm, Cm, h0, chunk=min(CHUNK, S))
+    y = y + xs * p["D"][None, None, :, None]
+    y = constrain(y.reshape(Bz, S, d_in), "batch", "seq", "ff")
+    y = _gated_rmsnorm(y, z.astype(jnp.float32), p["gn_w"])
+    out = constrain(y.astype(dt_a) @ p["out_proj"].astype(dt_a),
+                    "batch", "seq", "embed")
+    W1 = cfg.ssm_conv_width - 1
+    if S >= W1:
+        new_conv = xBC[:, -W1:, :]
+    else:
+        new_conv = jnp.pad(xBC, ((0, 0), (W1 - S, 0), (0, 0)))
+    return out, (new_conv, h)
+
+
+def mamba2_step(cfg: ModelConfig, p: Params, x, state):
+    """One-token mixer. x (B,1,d); state = (conv (B,W-1,Ch), ssm (B,H,N,P))."""
+    Bz, _, d = x.shape
+    d_in, H, P, N = dims(cfg)
+    dt_a = x.dtype
+    conv_state, h = state
+    proj = (x[:, 0] @ p["in_proj"].astype(dt_a))
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC_c, conv_state = conv_step(xBC, conv_state, p["conv_w"].astype(dt_a),
+                                  p["conv_b"].astype(dt_a))
+    xBC_c = jax.nn.silu(xBC_c)
+    xs = xBC_c[..., :d_in].reshape(Bz, H, P).astype(jnp.float32)
+    Bm = xBC_c[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = xBC_c[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    la = -jnp.exp(p["A_log"])[None, :] * dt
+    y, h = ssd_step(xs, dt, la, Bm, Cm, h)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(Bz, d_in)
+    y = _gated_rmsnorm(y, z.astype(jnp.float32), p["gn_w"])
+    out = (y.astype(dt_a) @ p["out_proj"].astype(dt_a))[:, None, :]
+    return out, (conv_state, h)

@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal rotary) splits the rotary feature dimension into
+(temporal, height, width) sections, each driven by its own position stream.
+For text-only tokens all three streams carry the same position, which makes
+M-RoPE degenerate to plain RoPE — the smoke tests rely on this property.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> angles (..., head_dim/2) in float32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions3, head_dim: int, theta: float, sections):
+    """positions3 (3, B, S) -> angles (B, S, head_dim/2).
+
+    ``sections`` = (t, h, w) counts of rotary *pairs* per stream;
+    must satisfy t + h + w == head_dim // 2.
+    """
+    t, h, w = sections
+    assert t + h + w == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)  # (head_dim/2,)
+    ang_all = positions3.astype(jnp.float32)[..., None] * inv  # (3, B, S, hd/2)
+    parts = [ang_all[0, ..., :t], ang_all[1, ..., t:t + h],
+             ang_all[2, ..., t + h:]]
+    return jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+
+
+def apply_rotary(x, angles):
+    """x (B, S, H, D), angles (B, S, D/2) -> rotated x (llama half-split)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def positional_angles(cfg: ModelConfig, positions):
+    """Dispatch rope/mrope. ``positions`` is (B, S) or (3, B, S) for mrope.
+
+    Returns (B, S, head_dim/2) angles or None for non-rotary configs.
+    """
+    if cfg.pos_type == "rope":
+        if positions.ndim == 3:  # accept (3,B,S) and use the temporal stream
+            positions = positions[0]
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    if cfg.pos_type == "mrope":
+        if positions.ndim == 2:  # text-only: replicate to all three streams
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.mrope_sections)
+    return None

@@ -1,0 +1,283 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Time-mix recurrence per head (K = V = head size):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state  S: (K, V))
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with data-dependent decay ``w_t = exp(-exp(w0 + tanh(x W_d1) W_d2))`` — the
+defining Finch feature — and bonus ``u`` for the current token.
+
+Training/prefill use a **chunked** parallel form with all decay ratios
+expressed as ``exp(negative)`` (log-space cumulative sums) so nothing
+overflows: intra-chunk uses the (C, C, K) exponent-difference tensor, the
+inter-chunk carry is a ``lax.scan``. This mirrors exactly what the Pallas
+kernel (kernels/rwkv6_chunk.py) computes per grid step. Decode is the plain
+recurrence.
+
+Simplification vs the released checkpoints (noted in DESIGN.md): token-shift
+interpolation uses static per-channel mixes rather than the 5-way low-rank
+ddlerp; decay keeps its full low-rank data dependence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (Params, adtype, chunked_cross_entropy,
+                                 cross_entropy_loss, dense_init, embed_tokens,
+                                 init_embeddings, init_norm, apply_norm,
+                                 logits_head, pdtype, scan_or_unroll,
+                                 split_keys)
+
+DECAY_LORA = 64
+CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _heads(cfg: ModelConfig):
+    K = cfg.rwkv_head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, K = _heads(cfg)
+    ks = split_keys(key, ["wr", "wk", "wv", "wg", "wo", "wd1", "wd2",
+                          "cm_k", "cm_v", "cm_r"])
+    pd = pdtype(cfg)
+    return {
+        "norm1": init_norm(cfg),
+        "norm2": init_norm(cfg),
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), pd),     # r,k,v,g,w token-shift mixes
+        "wr": dense_init(ks["wr"], (d, d), dtype=pd),
+        "wk": dense_init(ks["wk"], (d, d), dtype=pd),
+        "wv": dense_init(ks["wv"], (d, d), dtype=pd),
+        "wg": dense_init(ks["wg"], (d, d), dtype=pd),
+        "wo": dense_init(ks["wo"], (d, d), dtype=pd),
+        "w0": jnp.full((d,), -6.0, pd),       # base decay (w ~ exp(-exp(-6)))
+        "wd1": dense_init(ks["wd1"], (d, DECAY_LORA), dtype=pd),
+        "wd2": dense_init(ks["wd2"], (DECAY_LORA, d), scale=0.01, dtype=pd),
+        "u": 0.1 * jnp.ones((H, K), pd),      # bonus
+        "gn_w": jnp.ones((d,), pd),           # per-head groupnorm
+        "gn_b": jnp.zeros((d,), pd),
+        # channel-mix
+        "cm_mu": 0.5 * jnp.ones((2, d), pd),
+        "cm_k": dense_init(ks["cm_k"], (d, cfg.d_ff), dtype=pd),
+        "cm_v": dense_init(ks["cm_v"], (cfg.d_ff, d), dtype=pd),
+        "cm_r": dense_init(ks["cm_r"], (d, d), dtype=pd),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    kemb, klayers = jax.random.split(key)
+    layer_keys = jax.random.split(klayers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    return {"embed": init_embeddings(kemb, cfg), "layers": layers,
+            "final_norm": init_norm(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Pieces
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, x_last):
+    """x (B,S,d); x_last (B,d) carry from previous segment -> shifted x."""
+    return jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel log-decay (<= 0). xw (B,S,d) -> lw."""
+    dt = xw.dtype
+    lora = jnp.tanh(xw @ p["wd1"].astype(dt)) @ p["wd2"].astype(dt)
+    return -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+
+
+def _tm_projections(cfg, p, x, x_last):
+    """Compute r,k,v,g (B,S,H,K) and log-decay lw (B,S,H,K) from input."""
+    from repro.distributed.sharding import constrain
+    H, K = _heads(cfg)
+    B, S, d = x.shape
+    xs = _token_shift(x, x_last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xs - x) * mu[i] for i in range(5))
+    c = lambda a: constrain(a, "batch", "seq", "heads", None)
+    r = c((xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, K))
+    k = c((xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, K))
+    v = c((xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, K))
+    g = constrain(xg @ p["wg"].astype(x.dtype), "batch", "seq", "ff")
+    lw = c(_decay(p, xw).reshape(B, S, H, K))
+    return r, k, v, g, lw
+
+
+def _head_groupnorm(y, w, b, eps=1e-5):
+    """y (B,S,H,K) -> layernorm per head, scaled by (d,) params."""
+    B, S, H, K = y.shape
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, H * K)
+    return yn * w.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def wkv6_chunked(r, k, v, lw, u, state0, chunk: int = CHUNK):
+    """Chunked WKV6. r,k,v,lw (B,S,H,K) f32; state0 (B,H,K,V).
+
+    Returns y (B,S,H,V) f32 and final state. All decay applications are
+    exp(non-positive) — overflow-safe by construction.
+    """
+    B, S, H, K = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    rs = r.reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,K)
+    ks_ = k.reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    lws = lw.reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)        # s < t
+
+    def body(s0, inp):
+        rc, kc, vc, lwc = inp                                   # (B,H,C,K)
+        cum = jnp.cumsum(lwc, axis=2)                           # inclusive
+        cum_prev = cum - lwc                                    # through t-1
+        # inter-chunk: y_t += (r_t * exp(cum_{t-1})) . S0
+        r_dec = rc * jnp.exp(cum_prev)
+        y = jnp.einsum("bhtk,bhkv->bhtv", r_dec, s0)
+        # intra-chunk: A[t,s] = sum_k r_t k_s exp(cum_{t-1} - cum_s), s<t
+        diff = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,C,C,K)
+        diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+        A = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rc, kc, jnp.exp(diff))
+        # current-token bonus
+        Ad = jnp.einsum("bhtk,hk,bhtk->bht", rc, u, kc)
+        y = y + jnp.einsum("bhts,bhsv->bhtv", A, vc) + Ad[..., None] * vc
+        # state carry: S' = exp(cum_C) * S0 + sum_s exp(cum_C - cum_s) k_s v_s^T
+        k_dec = kc * jnp.exp(cum[:, :, -1:, :] - cum)
+        s_new = jnp.exp(cum[:, :, -1, :])[..., None] * s0 + \
+            jnp.einsum("bhsk,bhsv->bhkv", k_dec, vc)
+        return s_new, y
+
+    state, ys = jax.lax.scan(body, state0, (rs, ks_, vs, lws))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, K)
+    return y, state
+
+
+def wkv6_step(r, k, v, lw, u, state):
+    """One-token recurrence. r,k,v,lw (B,H,K); state (B,H,K,V)."""
+    y = jnp.einsum("bhk,bhkv->bhv", r, state) + \
+        jnp.einsum("bhk,hk,bhk,bhv->bhv", r, u, k, v)
+    state = jnp.exp(lw)[..., None] * state + \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    return y, state
+
+
+def time_mix(cfg, p, x, x_last, wkv_state, *, single_step: bool):
+    """Full time-mix sublayer. Returns (out, new_x_last, new_state)."""
+    B, S, d = x.shape
+    H, K = _heads(cfg)
+    r, k, v, g, lw = _tm_projections(cfg, p, x, x_last)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    if single_step:
+        y, state = wkv6_step(rf[:, 0], kf[:, 0], vf[:, 0], lw[:, 0], u,
+                             wkv_state)
+        y = y[:, None]
+    else:
+        y, state = wkv6_chunked(rf, kf, vf, lw, u, wkv_state,
+                                chunk=min(CHUNK, S))
+    y = _head_groupnorm(y, p["gn_w"], p["gn_b"])
+    out = (y.astype(x.dtype) * jax.nn.silu(g)) @ p["wo"].astype(x.dtype)
+    return out, x[:, -1, :], state
+
+
+def channel_mix(cfg, p, x, x_last):
+    from repro.distributed.sharding import constrain
+    xs = _token_shift(x, x_last)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(
+        constrain(xk @ p["cm_k"].astype(x.dtype), "batch", "seq", "ff")))
+    out = jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * \
+        (kk @ p["cm_v"].astype(x.dtype))
+    return constrain(out, "batch", "seq", "embed"), x[:, -1, :]
+
+
+def block(cfg, p, x, state, *, single_step: bool):
+    """state = (tm_last (B,d), cm_last (B,d), wkv (B,H,K,V))."""
+    tm_last, cm_last, wkv = state
+    h = apply_norm(cfg, p["norm1"], x)
+    out, tm_last, wkv = time_mix(cfg, p, h, tm_last, wkv,
+                                 single_step=single_step)
+    x = x + out
+    h = apply_norm(cfg, p["norm2"], x)
+    out, cm_last = channel_mix(cfg, p, h, cm_last)
+    return x + out, (tm_last, cm_last, wkv)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def make_state(cfg: ModelConfig, batch: int):
+    H, K = _heads(cfg)
+    L, d = cfg.num_layers, cfg.d_model
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {"tm_last": z(L, batch, d).astype(adtype(cfg)),
+            "cm_last": z(L, batch, d).astype(adtype(cfg)),
+            "wkv": z(L, batch, H, K, K)}
+
+
+def forward_hidden(cfg, params, tokens, state=None, *, single_step=False):
+    B = tokens.shape[0]
+    if state is None:
+        state = make_state(cfg, B)
+    x = embed_tokens(cfg, params["embed"], tokens)
+
+    def body(x, inp):
+        lp, tl, cl, wk = inp
+        x, (tl, cl, wk) = block(cfg, lp, x, (tl, cl, wk),
+                                single_step=single_step)
+        return x, (tl, cl, wk)
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and not single_step) else body
+    x, (tl, cl, wk) = scan_or_unroll(
+        body_fn, x, (params["layers"], state["tm_last"], state["cm_last"],
+                     state["wkv"]),
+        scan=cfg.scan_layers, length=cfg.num_layers)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, {"tm_last": tl, "cm_last": cl, "wkv": wk}
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    x, _ = forward_hidden(cfg, params, batch["tokens"])
+    if cfg.ce_impl == "chunked":
+        return chunked_cross_entropy(cfg, params["embed"], x, batch["labels"],
+                                     chunk=cfg.ce_chunk,
+                                     mask=batch.get("mask"))
+    logits = logits_head(cfg, params["embed"], x)
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, **_):
+    x, state = forward_hidden(cfg, params, tokens)
+    logits = logits_head(cfg, params["embed"], x[:, -1:, :])
+    state["index"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, state
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, **_):
+    index = cache.get("index", jnp.int32(0))
+    state_in = {k: v for k, v in cache.items() if k != "index"}
+    x, state = forward_hidden(cfg, params, token, state_in, single_step=True)
+    logits = logits_head(cfg, params["embed"], x)
+    state["index"] = index + 1
+    return logits, state

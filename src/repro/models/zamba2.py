@@ -1,0 +1,203 @@
+"""Zamba2 — Mamba2 backbone with a SHARED attention+MLP block applied every
+``cfg.attn_every`` mamba blocks.
+
+The shared block has ONE weight copy (a defining Zamba trait: attention
+weights amortised across the depth); each of the ``n_groups =
+num_layers/attn_every`` applications keeps its own KV cache. The released
+checkpoints add per-invocation LoRA deltas on the shared block — omitted
+here (noted in DESIGN.md §4).
+
+Layer-scan structure: outer scan over groups, inner scan over the group's
+mamba blocks; the shared block is closed over (single copy → no stacking).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models.common import (Params, adtype, apply_norm,
+                                 chunked_cross_entropy, cross_entropy_loss,
+                                 embed_tokens, init_embeddings, init_norm,
+                                 logits_head, scan_or_unroll, split_keys)
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.rope import positional_angles, apply_rotary
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0, (cfg.num_layers,
+                                                  cfg.attn_every)
+    return cfg.num_layers // cfg.attn_every
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    kemb, kmamba, kattn, kmlp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kmamba, cfg.num_layers)
+
+    def init_mblock(k):
+        return {"mixer": m2.init_mamba2(k, cfg), "norm": init_norm(cfg)}
+
+    mamba_layers = jax.vmap(init_mblock)(layer_keys)
+    shared = {
+        "attn": attn.init_attention(kattn, cfg),
+        "mlp": init_mlp(kmlp, cfg),
+        "norm1": init_norm(cfg),
+        "norm2": init_norm(cfg),
+    }
+    return {"embed": init_embeddings(kemb, cfg), "mamba": mamba_layers,
+            "shared": shared, "final_norm": init_norm(cfg)}
+
+
+def _regroup(tree, g, per):
+    return jax.tree.map(lambda a: a.reshape((g, per) + a.shape[1:]), tree)
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def shared_forward(cfg, sp, x, angles):
+    h = apply_norm(cfg, sp["norm1"], x)
+    q, k, v = attn.qkv_proj(cfg, sp["attn"], h)
+    if angles is not None:
+        q, k = apply_rotary(q, angles), apply_rotary(k, angles)
+    o = attn.attend(cfg, q, k, v, causal=True, window=cfg.sliding_window)
+    x = x + attn.out_proj(cfg, sp["attn"], o)
+    h = apply_norm(cfg, sp["norm2"], x)
+    return x + apply_mlp(cfg, sp["mlp"], h), (k, v)
+
+
+def shared_decode(cfg, sp, x, angles, ck, cv, index):
+    h = apply_norm(cfg, sp["norm1"], x)
+    q, k, v = attn.qkv_proj(cfg, sp["attn"], h)
+    if angles is not None:
+        q, k = apply_rotary(q, angles), apply_rotary(k, angles)
+    ck, cv = attn.cache_update(ck, cv, k, v, index,
+                               masked=cfg.decode_masked_write)
+    o = attn.decode_attend(cfg, q, ck, cv, index + 1,
+                           window=cfg.sliding_window)
+    x = x + attn.out_proj(cfg, sp["attn"], o)
+    h = apply_norm(cfg, sp["norm2"], x)
+    return x + apply_mlp(cfg, sp["mlp"], h), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int):
+    d_in, H, P, N = m2.dims(cfg)
+    g = n_groups(cfg)
+    conv_ch = d_in + 2 * cfg.ssm_state
+    kv = (g, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, adtype(cfg)),
+        "v": jnp.zeros(kv, adtype(cfg)),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+                           conv_ch), adtype(cfg)),
+        "ssm": jnp.zeros((cfg.num_layers, batch, H, N, P), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward_hidden(cfg, params, tokens, positions=None,
+                   collect_cache: bool = False):
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if positions is None:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    angles = positional_angles(cfg, positions)
+    g = n_groups(cfg)
+    grouped = _regroup(params["mamba"], g, cfg.attn_every)
+    sp = params["shared"]
+
+    def mamba_body(x, lp):
+        h = apply_norm(cfg, lp["norm"], x)
+        out, (conv, ssm) = m2.mamba2_forward(cfg, lp["mixer"], h)
+        return x + out, (conv, ssm)
+
+    def group_body(x, glp):
+        x, (conv, ssm) = scan_or_unroll(mamba_body, x, glp,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.attn_every)
+        x, (k, v) = shared_forward(cfg, sp, x, angles)
+        ys = (conv, ssm, k, v) if collect_cache else None
+        return x, ys
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, ys = scan_or_unroll(body, x, grouped, scan=cfg.scan_layers, length=g)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if collect_cache:
+        conv, ssm, k, v = ys
+        conv = conv.reshape((cfg.num_layers,) + conv.shape[2:])
+        ssm = ssm.reshape((cfg.num_layers,) + ssm.shape[2:])
+        return x, (conv, ssm, k, v)
+    return x, None
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    x, _ = forward_hidden(cfg, params, batch["tokens"])
+    if cfg.ce_impl == "chunked":
+        return chunked_cross_entropy(cfg, params["embed"], x, batch["labels"],
+                                     chunk=cfg.ce_chunk,
+                                     mask=batch.get("mask"))
+    logits = logits_head(cfg, params["embed"], x)
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, capacity=None, **_):
+    S = tokens.shape[1]
+    x, (conv, ssm, k, v) = forward_hidden(cfg, params, tokens,
+                                          collect_cache=True)
+    capacity = capacity or S
+    if capacity > S:
+        pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    logits = logits_head(cfg, params["embed"], x[:, -1:, :])
+    cache = {"k": k, "v": v, "conv": conv.astype(adtype(cfg)), "ssm": ssm,
+             "index": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, **_):
+    index = cache["index"]
+    B = token.shape[0]
+    x = embed_tokens(cfg, params["embed"], token)
+    angles = positional_angles(cfg, jnp.full((B, 1), index, jnp.int32))
+    g = n_groups(cfg)
+    grouped = _regroup(params["mamba"], g, cfg.attn_every)
+    conv_g = cache["conv"].reshape((g, cfg.attn_every) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((g, cfg.attn_every) + cache["ssm"].shape[1:])
+    sp = params["shared"]
+
+    def mamba_body(x, inp):
+        lp, conv, ssm = inp
+        h = apply_norm(cfg, lp["norm"], x)
+        out, (conv, ssm) = m2.mamba2_step(cfg, lp["mixer"], h,
+                                          (conv.astype(x.dtype), ssm))
+        return x + out, (conv.astype(adtype(cfg)), ssm)
+
+    def group_body(x, inp):
+        glp, conv, ssm, ck, cv = inp
+        x, (conv, ssm) = scan_or_unroll(mamba_body, x, (glp, conv, ssm),
+                                        scan=cfg.scan_layers,
+                                        length=cfg.attn_every)
+        x, ck, cv = shared_decode(cfg, sp, x, angles, ck, cv, index)
+        return x, (conv, ssm, ck, cv)
+
+    x, (conv, ssm, K, V) = scan_or_unroll(
+        group_body, x, (grouped, conv_g, ssm_g, cache["k"], cache["v"]),
+        scan=cfg.scan_layers, length=g)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_head(cfg, params["embed"], x)
+    new_cache = {
+        "k": K, "v": V,
+        "conv": conv.reshape((cfg.num_layers,) + conv.shape[2:]),
+        "ssm": ssm.reshape((cfg.num_layers,) + ssm.shape[2:]),
+        "index": index + 1,
+    }
+    return logits, new_cache

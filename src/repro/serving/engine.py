@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + decode with greedy/temperature
+sampling, EOS detection, and a simple admission queue (static batching;
+the trust-routed pipeline server in gtrac_serve.py layers G-TRAC on top).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model, build_model
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, capacity_margin: int = 64):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.margin = capacity_margin
+        self._prefill = jax.jit(
+            lambda p, toks, cap: self.model.prefill(p, tokens=toks,
+                                                    capacity=cap),
+            static_argnames=("cap",))
+        self._decode = jax.jit(self.model.decode_step)
+        self.queue: List[Request] = []
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(len(self.queue), np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id)
+        self.queue.append(req)
+        return req
+
+    def run_batch(self, reqs: Optional[List[Request]] = None,
+                  greedy: bool = True, temperature: float = 1.0,
+                  seed: int = 0) -> List[Request]:
+        """Serve requests to completion. Requests are grouped by prompt
+        length (padding a causal prompt shifts RoPE positions and leaks
+        attention onto pad tokens; length-bucketing is the standard fix)."""
+        reqs = reqs if reqs is not None else self.queue
+        if not reqs:
+            return []
+        by_len: Dict[int, List[Request]] = {}
+        for r in reqs:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for group in by_len.values():
+            self._run_equal_batch(group, greedy, temperature, seed)
+        return reqs
+
+    def _run_equal_batch(self, reqs: List[Request], greedy: bool,
+                         temperature: float, seed: int) -> List[Request]:
+        toks = np.stack([r.prompt for r in reqs])
+        max_new = max(r.max_new_tokens for r in reqs)
+        cap = toks.shape[1] + max_new + self.margin
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cap)
+        key = jax.random.PRNGKey(seed)
+        cur = None
+        for t in range(max_new):
+            if cur is None:
+                step_logits = logits
+            else:
+                step_logits, cache = self._decode(self.params, cur, cache)
+            if greedy:
+                nxt = jnp.argmax(step_logits[:, -1, :], axis=-1)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, step_logits[:, -1, :] / temperature, axis=-1)
+            cur = nxt[:, None].astype(jnp.int32)
+            nxt_np = np.asarray(nxt)
+            for i, r in enumerate(reqs):
+                if r.done or t >= r.max_new_tokens:
+                    continue
+                tok = int(nxt_np[i])
+                r.output.append(tok)
+                if r.eos_id is not None and tok == r.eos_id:
+                    r.done = True
+            if all(r.done or len(r.output) >= r.max_new_tokens
+                   for r in reqs):
+                break
+        for r in reqs:
+            r.done = True
+        return reqs

@@ -1,0 +1,35 @@
+"""KV-cache utilities for the serving engine.
+
+The per-family cache layouts live with the models (models/api.make_cache);
+this module adds engine-side management: capacity planning, growth, and
+per-request slicing for static-batch serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import make_cache  # re-export
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
+    """Host-side estimate of cache footprint (capacity planning)."""
+    spec = jax.eval_shape(lambda: make_cache(cfg, batch, capacity))
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(spec)))
+
+
+def grow_cache(cache, new_capacity: int):
+    """Grow the sequence axis of 5-D KV tensors (zero-padded)."""
+    def grow(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        name = keys[-1] if keys else None
+        if name in ("k", "v", "sk", "sv") and leaf.ndim == 5:
+            pad = new_capacity - leaf.shape[2]
+            if pad > 0:
+                return jnp.pad(leaf, [(0, 0), (0, 0), (0, pad), (0, 0),
+                                      (0, 0)])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, cache)

@@ -1,0 +1,18 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def warmup_cosine(cfg: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.learning_rate * step / max(1, cfg.warmup_steps)
+        progress = jnp.clip((step - cfg.warmup_steps) /
+                            max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        cos = 0.5 * cfg.learning_rate * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+    return lr

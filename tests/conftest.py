@@ -1,0 +1,38 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benchmarks must see
+the real single CPU device. Multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (test_distributed.py).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.core.registry import AnchorRegistry
+
+
+@pytest.fixture
+def gcfg():
+    return GTRACConfig()
+
+
+def build_layered_anchor(cfg, L=12, segments=(3, 6), replicas=4, seed=0,
+                         trust_range=(0.5, 1.0), latency_range=(10, 300)):
+    """Small layered registry for routing tests."""
+    rng = np.random.default_rng(seed)
+    anchor = AnchorRegistry(cfg)
+    pid = 0
+    for seg in segments:
+        for s in range(0, L, seg):
+            for _ in range(replicas):
+                anchor.register(pid, s, s + seg, now=0.0,
+                                trust=float(rng.uniform(*trust_range)),
+                                latency_ms=float(rng.uniform(*latency_range)))
+                anchor.heartbeat(pid, 0.0)
+                pid += 1
+    return anchor
+
+
+@pytest.fixture
+def layered_anchor(gcfg):
+    return build_layered_anchor(gcfg)

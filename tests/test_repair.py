@@ -1,0 +1,101 @@
+"""Bounded One-Shot Repair semantics (Alg. 1, lines 9–15)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.core import AnchorRegistry, ChainExecutor, find_replacement
+from repro.core.executor import split_reports
+
+
+def make_table(gcfg, trusts, latencies, segments):
+    a = AnchorRegistry(gcfg)
+    for pid, (tr, lat, (s, e)) in enumerate(zip(trusts, latencies,
+                                                segments)):
+        a.register(pid, s, e, now=0.0, trust=tr, latency_ms=lat)
+        a.heartbeat(pid, 0.0)
+    return a.snapshot(0.0)
+
+
+def scripted_hop_fn(outcomes):
+    """outcomes: dict peer_id -> list of success bools (popped per call)."""
+    calls = []
+
+    def hop(pid, k, payload):
+        calls.append(pid)
+        ok = outcomes.get(pid, [True]).pop(0) if outcomes.get(pid) else True
+        return payload, 50.0, ok
+
+    hop.calls = calls
+    return hop
+
+
+class TestRepair:
+    def test_replacement_same_segment_min_latency(self, gcfg):
+        t = make_table(gcfg,
+                       trusts=[1.0, 1.0, 1.0, 1.0],
+                       latencies=[100, 300, 80, 90],
+                       segments=[(0, 3), (0, 3), (0, 3), (3, 6)])
+        r = find_replacement(t, 0, tau=gcfg.trust_floor)
+        assert r == 2  # same segment, lowest latency, not the failed peer
+
+    def test_replacement_never_below_floor(self, gcfg):
+        t = make_table(gcfg, trusts=[1.0, 0.5], latencies=[100, 1],
+                       segments=[(0, 3), (0, 3)])
+        assert find_replacement(t, 0, tau=gcfg.trust_floor) is None
+
+    def test_one_shot_swap_rescues_request(self, gcfg):
+        t = make_table(gcfg, trusts=[1.0] * 3, latencies=[50, 60, 70],
+                       segments=[(0, 3), (0, 3), (3, 6)])
+        hop = scripted_hop_fn({0: [False]})       # peer 0 fails once
+        ex = ChainExecutor(gcfg, hop)
+        report, _ = ex.execute([0, 2], t)
+        assert report.success and report.repaired
+        assert report.repair_peer == 1            # swapped in
+        assert hop.calls == [0, 1, 2]             # retried the SAME step
+        # progress preserved: stage 1 (peer 2) ran exactly once
+
+    def test_second_failure_aborts(self, gcfg):
+        t = make_table(gcfg, trusts=[1.0] * 3, latencies=[50, 60, 70],
+                       segments=[(0, 3), (0, 3), (3, 6)])
+        hop = scripted_hop_fn({0: [False], 1: [False]})
+        ex = ChainExecutor(gcfg, hop)
+        report, _ = ex.execute([0, 2], t)
+        assert not report.success
+        assert report.failed_peer == 1            # the retry's failure
+        assert hop.calls == [0, 1]                # exactly one retry, bounded
+
+    def test_repair_disabled(self):
+        gcfg = GTRACConfig(repair_enabled=False)
+        t = make_table(gcfg, trusts=[1.0] * 2, latencies=[50, 60],
+                       segments=[(0, 3), (0, 3)])
+        hop = scripted_hop_fn({0: [False]})
+        ex = ChainExecutor(gcfg, hop)
+        report, _ = ex.execute([0], t)
+        assert not report.success and hop.calls == [0]
+
+    def test_attribution_after_rescue(self, gcfg):
+        """The ORIGINAL failing hop is still penalised even when the repair
+        rescues the request (preserves trust-learning integrity)."""
+        t = make_table(gcfg, trusts=[1.0] * 3, latencies=[50, 60, 70],
+                       segments=[(0, 3), (0, 3), (3, 6)])
+        hop = scripted_hop_fn({0: [False]})
+        ex = ChainExecutor(gcfg, hop)
+        report, _ = ex.execute([0, 2], t)
+        reports = split_reports(report)
+        fails = [r for r in reports if not r.success]
+        succ = [r for r in reports if r.success]
+        assert len(fails) == 1 and fails[0].failed_peer == 0
+        assert len(succ) == 1 and set(succ[0].chain) == {1, 2}
+
+    def test_payload_flows_through_swapped_chain(self, gcfg):
+        t = make_table(gcfg, trusts=[1.0] * 3, latencies=[50, 60, 70],
+                       segments=[(0, 3), (0, 3), (3, 6)])
+
+        def hop(pid, k, payload):
+            if pid == 0:
+                return payload, 10.0, False
+            return payload + [pid], 10.0, True
+
+        ex = ChainExecutor(gcfg, hop)
+        report, payload = ex.execute([0, 2], t, payload=[])
+        assert report.success and payload == [1, 2]

@@ -1,0 +1,168 @@
+"""Routing algorithm tests: optimality, equivalence, and the paper's
+risk-bound properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GTRACConfig
+from repro.core import (brute_force_route, gtrac_route, k_max, larac_route,
+                        mr_route, naive_route, risk_bound, sp_route,
+                        trust_floor_for, verify_design_guarantee)
+from repro.core.routing import enumerate_chains
+from repro.core.routing_jax import route_batched
+
+from conftest import build_layered_anchor
+
+
+def table_of(anchor):
+    return anchor.snapshot(0.0)
+
+
+class TestGtrac:
+    def test_optimal_vs_bruteforce_on_pruned_graph(self, gcfg):
+        """G-TRAC = exact shortest path over the trust-pruned DAG."""
+        for seed in range(5):
+            anchor = build_layered_anchor(gcfg, L=9, segments=(3,),
+                                          replicas=5, seed=seed,
+                                          trust_range=(0.8, 1.0))
+            t = table_of(anchor)
+            eps = 0.3
+            kmax = k_max(9, 3)
+            tau = trust_floor_for(eps, kmax)
+            g = gtrac_route(t, 9, gcfg, tau=tau)
+            bf = brute_force_route(t, 9, gcfg, epsilon=1 - tau ** kmax)
+            if g.feasible:
+                # brute force over the SAME feasible set can't beat it
+                assert bf.total_cost <= g.total_cost + 1e-9
+                assert g.reliability >= 1 - eps - 1e-9
+
+    def test_respects_liveness(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        t.alive[:] = False
+        r = gtrac_route(t, 12, gcfg, tau=0.0)
+        assert not r.feasible
+
+    def test_prunes_low_trust(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        r = gtrac_route(t, 12, gcfg, tau=0.999999)
+        if r.feasible:
+            assert all(t.trust[t.index_of(p)] >= 0.999999 for p in r.chain)
+
+    def test_chain_is_contiguous(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        r = gtrac_route(t, 12, gcfg, tau=0.0)
+        assert r.feasible
+        pos = 0
+        for pid in r.chain:
+            i = t.index_of(pid)
+            assert t.layer_start[i] == pos
+            pos = t.layer_end[i]
+        assert pos == 12
+
+
+class TestBaselines:
+    def test_sp_minimises_latency(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        r = sp_route(t, 12, gcfg)
+        chains = enumerate_chains(t, t.alive, 12)
+        best = min(float(np.sum(t.latency_ms[c])) for c in chains)
+        assert r.total_cost == pytest.approx(best)
+
+    def test_mr_maximises_reliability(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        r = mr_route(t, 12, gcfg)
+        chains = enumerate_chains(t, t.alive, 12)
+        best = max(float(np.prod(t.trust[c])) for c in chains)
+        assert r.reliability == pytest.approx(best)
+
+    def test_naive_returns_complete_chain(self, gcfg, layered_anchor):
+        t = table_of(layered_anchor)
+        r = naive_route(t, 12, gcfg, rng=np.random.default_rng(0))
+        assert r.feasible and r.hops >= 2
+
+    def test_larac_meets_constraint_when_feasible(self, gcfg):
+        anchor = build_layered_anchor(gcfg, trust_range=(0.9, 1.0))
+        t = table_of(anchor)
+        eps = 0.5
+        r = larac_route(t, 12, gcfg, epsilon=eps)
+        if r.feasible:
+            assert r.reliability >= 1 - eps - 1e-9
+
+
+class TestBatchedRouter:
+    def test_matches_dijkstra_cost(self, gcfg):
+        for seed in range(4):
+            anchor = build_layered_anchor(gcfg, L=12, seed=seed)
+            t = table_of(anchor)
+            taus = np.array([0.0, 0.6, 0.8, 0.95])
+            ids, costs = route_batched(t, 12, gcfg, taus, k_max=6)
+            for i, tau in enumerate(taus):
+                ref = gtrac_route(t, 12, gcfg, tau=float(tau))
+                if ref.feasible:
+                    assert costs[i] == pytest.approx(ref.total_cost,
+                                                     rel=1e-5)
+                    chain = [p for p in ids[i] if p >= 0]
+                    assert len(chain) == ref.hops
+                else:
+                    assert costs[i] >= 1e38
+
+    def test_kernel_matches_jnp_dp(self, gcfg):
+        import jax.numpy as jnp
+        from repro.core.routing_jax import effective_costs, layered_dp
+        from repro.kernels.ops import tropical_route
+        anchor = build_layered_anchor(gcfg, L=12, replicas=8)
+        t = table_of(anchor)
+        taus = np.linspace(0, 0.9, 8)
+        costs = effective_costs(jnp.asarray(t.latency_ms, jnp.float32),
+                                jnp.asarray(t.trust, jnp.float32),
+                                jnp.asarray(t.alive),
+                                jnp.asarray(taus, jnp.float32),
+                                gcfg.request_timeout_ms)
+        starts = jnp.asarray(t.layer_start, jnp.int32)
+        ends = jnp.asarray(t.layer_end, jnp.int32)
+        d1, p1 = layered_dp(starts, ends, costs, total_layers=12)
+        d2, p2 = tropical_route(starts, ends, costs, total_layers=12,
+                                interpret=True, blk_r=8)
+        np.testing.assert_allclose(np.where(np.asarray(d1) < 1e38, d1, 0),
+                                   np.where(np.asarray(d2) < 1e38, d2, 0),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ---------------------------------------------------------------------------
+# Property-based: the paper's Lemma 1 + Design Guarantee
+# ---------------------------------------------------------------------------
+
+
+@given(tau=st.floats(0.5, 0.999), k=st.integers(1, 12),
+       trusts=st.lists(st.floats(0.5, 1.0), min_size=1, max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_lemma1_risk_bound(tau, k, trusts):
+    """Risk(pi) <= 1 - tau^K for any chain of peers with r_p >= tau."""
+    trusts = trusts[:k]
+    if any(r < tau for r in trusts):
+        return  # not drawn from the pruned graph
+    rel = float(np.prod(trusts))
+    assert 1 - rel <= risk_bound(tau, len(trusts)) + 1e-12
+
+
+@given(eps=st.floats(0.01, 0.9), kmax=st.integers(1, 16),
+       data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_design_guarantee(eps, kmax, data):
+    """tau = (1-eps)^(1/K_max) ==> any pruned-graph chain satisfies
+    Rel >= 1 - eps (Appendix A)."""
+    tau = trust_floor_for(eps, kmax)
+    k = data.draw(st.integers(1, kmax))
+    trusts = data.draw(st.lists(st.floats(tau, 1.0), min_size=k,
+                                max_size=k))
+    assert verify_design_guarantee(trusts, eps, kmax)
+
+
+@given(eps=st.floats(0.01, 0.9), kmax=st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_trust_floor_monotone(eps, kmax):
+    tau = trust_floor_for(eps, kmax)
+    assert 0 < tau < 1
+    if kmax > 1:  # longer chains need a stricter floor
+        assert tau > trust_floor_for(eps, kmax - 1) or kmax == 1

@@ -1,0 +1,98 @@
+"""Simulator tests: paper testbed construction, workload metrics, fault
+injection (crashes + partitions), honey-pot isolation dynamics."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.sim.testbed import build_paper_testbed, build_scaling_testbed
+from repro.sim.workload import run_workload
+
+
+class TestTestbed:
+    def test_336_peers_all_stages_covered(self):
+        bed = build_paper_testbed(seed=0)
+        assert len(bed.peers) == 336
+        # every shard granularity covers [0, 36)
+        for size in (3, 6, 9):
+            covered = set()
+            for p in bed.peers.values():
+                if p.num_layers == size:
+                    covered.add((p.layer_start, p.layer_end))
+            assert covered == {(s, s + size) for s in range(0, 36, size)}
+
+    def test_profiles_present(self):
+        bed = build_paper_testbed(seed=0)
+        for name in ("honeypot", "turtle", "golden"):
+            assert len(bed.peers_by_profile(name)) > 0
+
+    def test_profile_parameters_in_paper_ranges(self):
+        bed = build_paper_testbed(seed=0)
+        for p in bed.peers_by_profile("honeypot"):
+            assert 0.20 <= p.p_fail <= 0.35
+        for p in bed.peers_by_profile("golden"):
+            assert p.p_fail == 0.0 and 20 <= p.net_delay_ms <= 40
+        for p in bed.peers_by_profile("turtle"):
+            assert p.p_fail == pytest.approx(0.001)
+            assert 150 <= p.net_delay_ms <= 300
+
+    def test_crash_expires_via_ttl(self):
+        bed = build_paper_testbed(seed=0)
+        victim = next(iter(bed.peers))
+        bed.crash_peers([victim])
+        bed.advance(bed.cfg.node_ttl_s + bed.cfg.heartbeat_s + 1)
+        t = bed.anchor.snapshot(bed.now)
+        assert not bool(t.alive[t.index_of(victim)])
+        alive_frac = t.alive.mean()
+        assert alive_frac > 0.9  # others keep heartbeating
+
+    def test_partition_heals(self):
+        bed = build_paper_testbed(seed=0)
+        some = list(bed.peers)[:50]
+        bed.partition(some)
+        bed.advance(bed.cfg.node_ttl_s + 3)
+        t = bed.anchor.snapshot(bed.now)
+        assert not any(t.alive[t.index_of(p)] for p in some)
+        bed.heal_partition()
+        bed.advance(bed.cfg.heartbeat_s + 1)
+        t = bed.anchor.snapshot(bed.now)
+        assert all(t.alive[t.index_of(p)] for p in some)
+
+
+class TestWorkload:
+    def test_gtrac_beats_sp_and_isolates_honeypots(self):
+        bed = build_paper_testbed(seed=3)
+        run_workload(bed, "gtrac", n_requests=15, l_tok=5)       # warmup
+        g = run_workload(bed, "gtrac", n_requests=20, l_tok=10,
+                         request_id_base=100)
+        bed2 = build_paper_testbed(seed=3)
+        run_workload(bed2, "sp", n_requests=15, l_tok=5)
+        s = run_workload(bed2, "sp", n_requests=20, l_tok=10,
+                         request_id_base=100)
+        assert g.ssr > s.ssr
+        # honeypots that failed must sit below the trust floor now
+        t = bed.anchor.snapshot(bed.now)
+        struck = [r for r in bed.anchor.peers.values() if r.failures > 0]
+        assert struck, "workload should have triggered failures"
+        assert all(r.trust < bed.cfg.trust_floor for r in struck)
+
+    def test_request_survives_mid_run_crash(self):
+        """Node failures during service: repair + rerouting keep SSR high."""
+        bed = build_paper_testbed(seed=4)
+        run_workload(bed, "gtrac", n_requests=10, l_tok=5)
+        golden = [p.peer_id for p in bed.peers_by_profile("golden")][:30]
+        bed.crash_peers(golden)
+        bed.advance(bed.cfg.node_ttl_s + 3)
+        stats = run_workload(bed, "gtrac", n_requests=15, l_tok=10,
+                             request_id_base=500)
+        assert stats.ssr >= 0.6  # degraded but robust (paper's claim)
+
+    def test_wilson_ci_sane(self):
+        bed = build_paper_testbed(seed=0)
+        s = run_workload(bed, "mr", n_requests=10, l_tok=3)
+        lo, hi = s.wilson_ci()
+        assert 0.0 <= lo <= s.ssr <= hi <= 1.0
+
+    def test_scaling_testbed_sizes(self):
+        for n in (50, 200):
+            bed = build_scaling_testbed(n, seed=0)
+            assert len(bed.peers) == n

@@ -1,0 +1,126 @@
+"""Trust protocol tests: EWMA, asymmetric updates, liveness, gossip
+staleness, and the jitted JAX twin."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GTRACConfig
+from repro.core import AnchorRegistry, SeekerCache
+from repro.core.trust import (effective_cost, ewma_latency, jax_apply_report,
+                              penalize, reward)
+from repro.core.types import ExecReport, HopReport
+
+
+class TestRules:
+    def test_ewma(self, gcfg):
+        assert ewma_latency(100.0, 200.0, 0.3) == pytest.approx(130.0)
+
+    def test_effective_cost_penalises_unreliable(self, gcfg):
+        fast_risky = effective_cost(1.0, 0.7, gcfg.request_timeout_ms)
+        slow_safe = effective_cost(300.0, 1.0, gcfg.request_timeout_ms)
+        assert fast_risky > slow_safe  # the honey-pot defence, Eq. (4)
+
+    def test_reward_penalty_caps(self, gcfg):
+        assert reward(0.99, gcfg) == gcfg.max_trust
+        assert penalize(0.1, gcfg) == gcfg.min_trust
+
+    @given(r=st.floats(0.0, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_updates_stay_in_unit_interval(self, r):
+        cfg = GTRACConfig()
+        assert 0.0 <= reward(r, cfg) <= 1.0
+        assert 0.0 <= penalize(r, cfg) <= 1.0
+
+
+class TestRegistry:
+    def test_targeted_attribution(self, gcfg):
+        """Success rewards ALL chain peers; failure penalises ONLY the
+        failing hop (§IV-C)."""
+        a = AnchorRegistry(gcfg)
+        for pid in range(3):
+            a.register(pid, pid, pid + 1, now=0.0)
+        t0 = {pid: a.peers[pid].trust for pid in range(3)}
+        a.apply_report(ExecReport(True, [0, 1, 2],
+                                  [HopReport(p, 100.0, True)
+                                   for p in range(3)]))
+        for pid in range(3):
+            assert a.peers[pid].trust == pytest.approx(
+                min(1.0, t0[pid] + gcfg.trust_reward))
+        t1 = {pid: a.peers[pid].trust for pid in range(3)}
+        a.apply_report(ExecReport(False, [0, 1, 2],
+                                  [HopReport(1, 100.0, False)],
+                                  failed_peer=1))
+        assert a.peers[0].trust == t1[0]
+        assert a.peers[2].trust == t1[2]
+        assert a.peers[1].trust == pytest.approx(t1[1] - gcfg.trust_penalty)
+
+    def test_failure_isolates_below_floor(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0)
+        a.apply_report(ExecReport(False, [0], [HopReport(0, 1.0, False)],
+                                  failed_peer=0))
+        assert a.peers[0].trust < gcfg.trust_floor  # one strike isolates
+
+    def test_liveness_ttl(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0)
+        a.register(1, 0, 3, now=0.0)
+        a.heartbeat(0, 100.0)
+        a.heartbeat(1, 100.0 - gcfg.node_ttl_s - 1)
+        t = a.snapshot(100.0)
+        assert bool(t.alive[t.index_of(0)])
+        assert not bool(t.alive[t.index_of(1)])
+
+    def test_latency_ewma_only_on_executed_hops(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0, latency_ms=100.0)
+        a.apply_report(ExecReport(True, [0], [HopReport(0, 200.0, True)]))
+        assert a.peers[0].latency_est_ms == pytest.approx(
+            (1 - gcfg.ewma_beta) * 100 + gcfg.ewma_beta * 200)
+
+
+class TestGossip:
+    def test_cache_is_stale_between_syncs(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0)
+        cache = SeekerCache(a, gcfg, now=0.0)
+        a.peers[0].trust = 0.123
+        # before T_gossip: stale view unchanged
+        assert not cache.maybe_sync(gcfg.gossip_period_s / 2)
+        assert cache.view().trust[0] != pytest.approx(0.123)
+        # after T_gossip: refreshed
+        assert cache.maybe_sync(gcfg.gossip_period_s + 0.01)
+        assert cache.view().trust[0] == pytest.approx(0.123)
+
+    def test_routing_never_blocks_on_anchor(self, gcfg):
+        """The cached view is routable even if the anchor has moved on."""
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0)
+        a.heartbeat(0, 0.0)
+        cache = SeekerCache(a, gcfg, now=0.0)
+        a.deregister(0)                      # anchor state changed
+        t = cache.view()                     # seeker still routes on cache
+        assert len(t) == 1
+
+
+class TestJaxTwin:
+    def test_matches_python_rules(self, gcfg):
+        trust = jnp.array([0.9, 0.8, 0.7, 0.6])
+        lat = jnp.array([100.0, 200.0, 300.0, 400.0])
+        chain = jnp.array([True, True, False, False])
+        failed = jnp.array([False, False, False, False])
+        obs = jnp.array([150.0, 250.0, 0.0, 0.0])
+        nt, nl = jax_apply_report(trust, lat, chain, failed, obs,
+                                  jnp.bool_(True), gcfg)
+        assert float(nt[0]) == pytest.approx(reward(0.9, gcfg))
+        assert float(nt[2]) == pytest.approx(0.7)
+        assert float(nl[0]) == pytest.approx(ewma_latency(100, 150,
+                                                          gcfg.ewma_beta))
+        assert float(nl[2]) == pytest.approx(300.0)
+        # failure path
+        failed = jnp.array([False, True, False, False])
+        nt2, _ = jax_apply_report(trust, lat, chain, failed, obs,
+                                  jnp.bool_(False), gcfg)
+        assert float(nt2[1]) == pytest.approx(penalize(0.8, gcfg))
+        assert float(nt2[0]) == pytest.approx(0.9)
