@@ -1,0 +1,21 @@
+# Verify loop for the G-TRAC reproduction. Targets:
+#   make test          tier-1 suite (the ROADMAP command)
+#   make bench-routing routing scaling bench -> BENCH_routing.json
+#   make lint          compile-check + pyflakes (if installed)
+
+PY        ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test bench-routing lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-routing:
+	$(PY) -m benchmarks.bench_scaling
+
+lint:
+	$(PY) -m compileall -q src benchmarks tests examples
+	-$(PY) -m pyflakes src benchmarks tests examples 2>/dev/null || \
+	    echo "pyflakes not installed; compile-check only"

@@ -1,8 +1,11 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)
+plus JSON result files (``write_json``) for machine-readable before/after
+tracking (e.g. BENCH_routing.json from bench_scaling.py)."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
 
@@ -27,3 +30,19 @@ def time_fn(fn: Callable, n: int = 5, warmup: int = 1) -> float:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def write_json(path: str, prefix: Optional[str] = None,
+               extra: Optional[Dict] = None) -> None:
+    """Dump emitted rows (optionally filtered by name prefix) to ``path``.
+
+    Schema: {"rows": [{"name", "us_per_call", "derived"}], **extra} —
+    consumed by before/after tooling and CI trend tracking."""
+    rows = [r for r in ROWS if prefix is None or r[0].startswith(prefix)]
+    data = {"rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in rows]}
+    if extra:
+        data.update(extra)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"wrote {path} ({len(rows)} rows)", flush=True)

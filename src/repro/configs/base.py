@@ -262,6 +262,11 @@ class GTRACConfig:
     init_trust: float = 1.0
     max_trust: float = 1.0
     min_trust: float = 0.0
+    # route planner (core/planner.py): alternates retained per plan so
+    # mid-chain failures splice a precomputed suffix instead of re-searching
+    k_best_routes: int = 4
+    # compiled snapshots / cached plans kept per planner (LRU)
+    planner_cache_size: int = 8
 
 
 def asdict(cfg) -> dict:

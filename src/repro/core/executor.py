@@ -6,11 +6,16 @@ JAX stage execution (serving/gtrac_serve.py):
 
     hop_fn(peer_id, stage_index, payload) -> (payload', latency_ms, ok)
 
-On hop failure with repair enabled, the executor queries the trusted set for
-the minimum-latency replacement hosting the SAME layer segment (line 10) and
-retries the failed hop exactly once; intermediate progress x_{k-1} is never
-discarded. Unbounded retries are deliberately not offered (§IV-C: bounded
-corrective action preserves failure attribution and risk semantics).
+On hop failure with repair enabled, the executor first consults the
+request's precomputed ``RoutePlan`` (core/planner.py) when one is supplied:
+the plan's K-best alternates yield a full replacement *suffix* from the
+failed hop's start boundary with zero additional graph search. If no
+alternate avoids the failed peer (or no plan was provided), it falls back
+to querying the trusted set for the minimum-latency replacement hosting
+the SAME layer segment (line 10). Either way the failed hop is retried
+exactly once; intermediate progress x_{k-1} is never discarded. Unbounded
+retries are deliberately not offered (§IV-C: bounded corrective action
+preserves failure attribution and risk semantics).
 """
 from __future__ import annotations
 
@@ -22,6 +27,17 @@ from repro.configs.base import GTRACConfig
 from repro.core.types import ExecReport, HopReport, PeerTable
 
 HopFn = Callable[[int, int, object], Tuple[object, float, bool]]
+
+
+def try_plan_splice(plan, table: PeerTable, failed_idx: Optional[int],
+                    exclude: set) -> Optional[List[int]]:
+    """Precomputed-failover helper shared by both executors: the cheapest
+    RoutePlan alternate suffix through the failed hop's start boundary
+    avoiding ``exclude`` (peer ids), or None."""
+    if plan is None or failed_idx is None:
+        return None
+    boundary = int(table.layer_start[failed_idx])
+    return plan.resume_suffix(boundary, exclude=exclude)
 
 
 def find_replacement(table: PeerTable, failed_idx: int, tau: float,
@@ -46,11 +62,18 @@ class ChainExecutor:
     def __init__(self, cfg: GTRACConfig, hop_fn: HopFn):
         self.cfg = cfg
         self.hop_fn = hop_fn
+        self.plan_repairs = 0      # repairs served from a RoutePlan alternate
 
     def execute(self, chain: List[int], table: PeerTable,
                 payload: object = None,
-                tau: Optional[float] = None) -> Tuple[ExecReport, object]:
-        """Run the chain; Alg. 1 lines 7–15. Returns (report, final payload)."""
+                tau: Optional[float] = None,
+                plan=None) -> Tuple[ExecReport, object]:
+        """Run the chain; Alg. 1 lines 7–15. Returns (report, final payload).
+
+        ``plan`` (a planner.RoutePlan over the same ``table``) supplies
+        K-best alternate chains; on failure the cheapest alternate suffix
+        through the failed hop's boundary is spliced in without any fresh
+        route search."""
         tau = self.cfg.trust_floor if tau is None else tau
         hops: List[HopReport] = []
         total_ms = 0.0
@@ -77,6 +100,15 @@ class ChainExecutor:
                 fidx = table.index_of(pid)
             except KeyError:
                 fidx = None
+            suffix = try_plan_splice(plan, table, fidx, exclude={pid})
+            if suffix is not None:
+                # precomputed failover: splice the alternate suffix onto
+                # the executed prefix — no fresh search
+                repaired = True
+                repair_peer = suffix[0]
+                exec_chain[k:] = suffix
+                self.plan_repairs += 1
+                continue
             ridx = (find_replacement(table, fidx, tau)
                     if fidx is not None else None)
             if ridx is None:

@@ -13,10 +13,15 @@ Failover: when the primary misses ``primary_ttl`` of liveness probes, the
 first live backup is promoted; seekers keep routing from their caches
 throughout (the control plane is off the critical path — the paper's own
 argument makes the failover invisible to in-flight inference).
+
+Replication is array-copy, not ``copy.deepcopy``: the primary exports its
+columnar ``RegistryState`` (shared zero-copy with its snapshot mirror) and
+each backup adopts the column arrays in O(#columns); backups only pay the
+O(P) record materialisation lazily, on first control-plane access after a
+promotion.
 """
 from __future__ import annotations
 
-import copy
 from typing import List, Optional
 
 from repro.configs.base import GTRACConfig
@@ -73,16 +78,18 @@ class ReplicatedAnchor:
     # -- replication & failover ------------------------------------------------
 
     def tick(self, now: float) -> None:
-        """Background replication: backups copy the primary's state."""
+        """Background replication: backups adopt the primary's columnar
+        state (a handful of array refs + one heartbeat-column copy) instead
+        of deep-copying the entire peer-record map per backup."""
         if now - self._last_sync < self.sync_period_s:
             return
         self._last_sync = now
         if not self.alive[self.primary_idx]:
             return
-        state = copy.deepcopy(self.primary.peers)
+        state = self.primary.export_state()
         for i, rep in enumerate(self.replicas):
             if i != self.primary_idx and self.alive[i]:
-                rep.peers = copy.deepcopy(state)
+                rep.adopt_state(state)
 
     def crash_primary(self) -> None:
         self.alive[self.primary_idx] = False

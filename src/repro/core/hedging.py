@@ -21,7 +21,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.executor import find_replacement
+from repro.core.executor import find_replacement, try_plan_splice
 from repro.core.types import ExecReport, HopReport, PeerTable
 
 
@@ -46,6 +46,7 @@ class HedgedChainExecutor:
         self.hop_fn = hop_fn
         self.quantile_factor = quantile_factor
         self.stats = HedgeStats()
+        self.plan_repairs = 0      # repairs served from a RoutePlan alternate
 
     def _hedge_trigger_ms(self, table: PeerTable, pid: int) -> float:
         try:
@@ -56,7 +57,11 @@ class HedgedChainExecutor:
 
     def execute(self, chain: List[int], table: PeerTable,
                 payload: object = None,
-                tau: Optional[float] = None) -> Tuple[ExecReport, object]:
+                tau: Optional[float] = None,
+                plan=None) -> Tuple[ExecReport, object]:
+        """``plan`` (planner.RoutePlan over the same table) lets the
+        post-hedge repair splice a precomputed K-best alternate suffix
+        instead of searching for a same-segment replacement."""
         tau = self.cfg.trust_floor if tau is None else tau
         hops: List[HopReport] = []
         total_ms = 0.0
@@ -81,10 +86,13 @@ class HedgedChainExecutor:
             # primary is slow (or failed): fire the hedge
             fidx = table.index_of(pid)
             hidx = find_replacement(table, fidx, tau)
+            failed_hedge = None
             if hidx is not None:
                 self.stats.hedges_fired += 1
                 hpid = int(table.peer_ids[hidx])
                 hout, hlat, hok = self.hop_fn(hpid, k, payload)
+                if not hok:
+                    failed_hedge = hpid
                 hedge_total = trigger + hlat     # issued at the trigger time
                 if hok and (not ok or hedge_total < lat):
                     # hedge wins the race
@@ -111,6 +119,16 @@ class HedgedChainExecutor:
                 return ExecReport(False, exec_chain, hops, failed_peer=pid,
                                   repaired=repaired, repair_peer=repair_peer,
                                   total_latency_ms=total_ms), payload
+            # exclude the hedge peer too when it just failed, so the splice
+            # cannot hand back the peer that lost this very hop
+            exclude = {pid} if failed_hedge is None else {pid, failed_hedge}
+            suffix = try_plan_splice(plan, table, fidx, exclude=exclude)
+            if suffix is not None:
+                repaired = True
+                repair_peer = suffix[0]
+                exec_chain[k:] = suffix
+                self.plan_repairs += 1
+                continue
             ridx = find_replacement(table, fidx, tau)
             if ridx is None:
                 return ExecReport(False, exec_chain, hops, failed_peer=pid,

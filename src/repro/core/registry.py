@@ -7,16 +7,66 @@ seeker-side *stale* view Σ̃_t, refreshed by background synchronisation every
 ``T_gossip`` — never synchronously on the request path. Routing always reads
 the cache, which is what decouples control-plane latency from the inference
 critical path.
+
+Snapshot-versioning contract (consumed by core/planner.py):
+
+* ``version`` bumps on every record mutation (register / deregister /
+  apply_report / reset_trust / adopt_state) and whenever the liveness
+  vector changes at snapshot time (heartbeat-expiry or revival).
+* ``topo_version`` bumps only on membership changes — the planner keys its
+  compiled CSR graph on it, so trust/latency feedback never recompiles.
+* ``snapshot(now)`` is zero-copy: while nothing changed it returns the
+  *identical*, unmutated ``PeerTable`` object (``snapshot_time`` is the
+  time the content was captured, not of the latest call); after a pure
+  state change the new table shares the freshly-built column arrays of an
+  internal columnar mirror, with no per-record Python loop on the
+  unchanged path. Heartbeats update the mirror in place (a single
+  array store), so steady-state heartbeat traffic never invalidates the
+  snapshot.
+* ``export_state`` / ``adopt_state`` replicate a registry as a handful of
+  column arrays (no ``copy.deepcopy``); adopted state materialises back
+  into ``PeerRecord`` objects lazily on first control-plane access.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.configs.base import GTRACConfig
 from repro.core import trust as T
-from repro.core.types import ExecReport, PeerRecord, PeerTable
+from repro.core.types import ExecReport, PeerRecord, PeerTable, RegistryState
+
+_REGISTRY_IDS = itertools.count(0)
+
+
+class _Mirror:
+    """Columnar mirror of the records dict (rebuilt on version bump)."""
+
+    __slots__ = ("peer_ids", "layer_start", "layer_end", "trust",
+                 "latency_ms", "last_heartbeat", "successes", "failures",
+                 "profiles", "index")
+
+    def __init__(self, records: List[PeerRecord]):
+        n = len(records)
+        self.peer_ids = np.fromiter((r.peer_id for r in records),
+                                    np.int64, n)
+        self.layer_start = np.fromiter((r.layer_start for r in records),
+                                       np.int32, n)
+        self.layer_end = np.fromiter((r.layer_end for r in records),
+                                     np.int32, n)
+        self.trust = np.fromiter((r.trust for r in records), np.float64, n)
+        self.latency_ms = np.fromiter((r.latency_est_ms for r in records),
+                                      np.float64, n)
+        self.last_heartbeat = np.fromiter(
+            (r.last_heartbeat for r in records), np.float64, n)
+        self.successes = np.fromiter((r.successes for r in records),
+                                     np.int64, n)
+        self.failures = np.fromiter((r.failures for r in records),
+                                    np.int64, n)
+        self.profiles = [r.profile for r in records]
+        self.index = {int(p): i for i, p in enumerate(self.peer_ids)}
 
 
 class AnchorRegistry:
@@ -25,7 +75,45 @@ class AnchorRegistry:
 
     def __init__(self, cfg: GTRACConfig):
         self.cfg = cfg
-        self.peers: Dict[int, PeerRecord] = {}
+        self._peers: Dict[int, PeerRecord] = {}
+        self._pending_state: Optional[RegistryState] = None
+        self.registry_id = next(_REGISTRY_IDS)
+        self.version = 0        # any record mutation or liveness flip
+        self.topo_version = 0   # membership changes only
+        self._mirror: Optional[_Mirror] = None
+        self._table: Optional[PeerTable] = None
+
+    # -- record access -------------------------------------------------------
+
+    @property
+    def peers(self) -> Dict[int, PeerRecord]:
+        if self._pending_state is not None:
+            self._materialize()
+        return self._peers
+
+    def _touch(self, topo: bool = False) -> None:
+        self.version += 1
+        if topo:
+            self.topo_version += 1
+        self._mirror = None
+        self._table = None
+
+    def _materialize(self) -> None:
+        st, self._pending_state = self._pending_state, None
+        self._peers = {
+            int(st.peer_ids[i]): PeerRecord(
+                peer_id=int(st.peer_ids[i]),
+                layer_start=int(st.layer_start[i]),
+                layer_end=int(st.layer_end[i]),
+                trust=float(st.trust[i]),
+                latency_est_ms=float(st.latency_ms[i]),
+                last_heartbeat=float(st.last_heartbeat[i]),
+                successes=int(st.successes[i]),
+                failures=int(st.failures[i]),
+                profile=st.profiles[i],
+            )
+            for i in range(len(st.peer_ids))
+        }
 
     # -- membership --------------------------------------------------------
 
@@ -44,16 +132,25 @@ class AnchorRegistry:
             profile=profile,
         )
         self.peers[peer_id] = rec
+        self._touch(topo=True)
         return rec
 
     def deregister(self, peer_id: int) -> None:
-        self.peers.pop(peer_id, None)
+        if self.peers.pop(peer_id, None) is not None:
+            self._touch(topo=True)
 
     # -- liveness -----------------------------------------------------------
 
     def heartbeat(self, peer_id: int, now: float) -> None:
-        if peer_id in self.peers:
-            self.peers[peer_id].last_heartbeat = now
+        rec = self.peers.get(peer_id)
+        if rec is None:
+            return
+        rec.last_heartbeat = now
+        m = self._mirror
+        if m is not None:
+            i = m.index.get(peer_id)
+            if i is not None:
+                m.last_heartbeat[i] = now
 
     def heartbeat_all(self, peer_ids: Iterable[int], now: float) -> None:
         for pid in peer_ids:
@@ -67,30 +164,71 @@ class AnchorRegistry:
     # -- feedback (Alg. 1 line 16: UPDATETRUST) ------------------------------
 
     def apply_report(self, report: ExecReport) -> None:
+        peers = self.peers
+        changed = False
         for hop in report.hops:
-            rec = self.peers.get(hop.peer_id)
+            rec = peers.get(hop.peer_id)
             if rec is None:
                 continue
             if hop.success:
                 rec.latency_est_ms = T.ewma_latency(
                     rec.latency_est_ms, hop.latency_ms, self.cfg.ewma_beta)
+                changed = True
         if report.success:
             for pid in report.chain:
-                rec = self.peers.get(pid)
+                rec = peers.get(pid)
                 if rec is not None:
                     rec.trust = T.reward(rec.trust, self.cfg)
                     rec.successes += 1
+                    changed = True
         elif report.failed_peer is not None:
-            rec = self.peers.get(report.failed_peer)
+            rec = peers.get(report.failed_peer)
             if rec is not None:
                 rec.trust = T.penalize(rec.trust, self.cfg)
                 rec.failures += 1
+                changed = True
+        if changed:
+            self._touch()
 
     # -- snapshotting --------------------------------------------------------
 
+    def _ensure_mirror(self) -> _Mirror:
+        if self._mirror is None:
+            self._mirror = _Mirror(list(self.peers.values()))
+        return self._mirror
+
     def snapshot(self, now: float) -> PeerTable:
-        return PeerTable.from_records(list(self.peers.values()), now,
-                                      self.cfg.node_ttl_s)
+        """Versioned zero-copy snapshot: same object while unchanged."""
+        m = self._ensure_mirror()
+        alive = (now - m.last_heartbeat) <= self.cfg.node_ttl_s
+        t = self._table
+        if t is not None and np.array_equal(alive, t.alive):
+            # zero-copy: the table object is shared with every holder, so
+            # it is never mutated here — snapshot_time stays the time its
+            # CONTENT was captured (not the time of this call)
+            return t
+        if t is not None:
+            self.version += 1      # heartbeat-expiry / revival flipped a bit
+        # the registry version IS the table version: every rebuilt table is
+        # preceded by >= 1 bump (_touch or the liveness flip above), so
+        # distinct tables never share a version
+        t = PeerTable(
+            peer_ids=m.peer_ids, layer_start=m.layer_start,
+            layer_end=m.layer_end, trust=m.trust, latency_ms=m.latency_ms,
+            alive=alive, snapshot_time=now,
+            version=self.version, topo_version=self.topo_version,
+            source_id=self.registry_id,
+        )
+        self._table = t
+        return t
+
+    def set_trust(self, peer_id: int, trust: float) -> None:
+        """Out-of-band trust write (sims/operators). Mutating records
+        directly bypasses snapshot versioning — use this instead."""
+        rec = self.peers.get(peer_id)
+        if rec is not None:
+            rec.trust = trust
+            self._touch()
 
     def reset_trust(self) -> None:
         """Paper §VI-A: trust state is reset between algorithm runs."""
@@ -98,6 +236,30 @@ class AnchorRegistry:
             rec.trust = self.cfg.init_trust
             rec.latency_est_ms = self.cfg.init_latency_ms
             rec.successes = rec.failures = 0
+        self._touch()
+
+    # -- columnar replication (failover.py) ----------------------------------
+
+    def export_state(self) -> RegistryState:
+        """Column arrays of the full registry state, shared zero-copy with
+        the internal mirror where safe. Only ``last_heartbeat`` is copied:
+        it is the one column mutated in place (heartbeat fast path); every
+        other mutation rebuilds the mirror with fresh arrays."""
+        m = self._ensure_mirror()
+        return RegistryState(
+            peer_ids=m.peer_ids, layer_start=m.layer_start,
+            layer_end=m.layer_end, trust=m.trust, latency_ms=m.latency_ms,
+            last_heartbeat=m.last_heartbeat.copy(),
+            successes=m.successes, failures=m.failures,
+            profiles=m.profiles,
+        )
+
+    def adopt_state(self, state: RegistryState) -> None:
+        """Replace this registry's contents with a replicated column-array
+        state. O(#columns) — records rematerialize lazily on access."""
+        self._pending_state = state
+        self._peers = {}
+        self._touch(topo=True)
 
 
 class SeekerCache:
@@ -121,6 +283,9 @@ class SeekerCache:
         return False
 
     def force_sync(self, now: float) -> None:
+        """Array-copy sync: the anchor's snapshot is already columnar and
+        version-cached, so an unchanged registry costs one liveness
+        compare and hands back the identical table object."""
         self.table = self.anchor.snapshot(now)
         self.last_sync = now
         self.syncs += 1
@@ -131,4 +296,7 @@ class SeekerCache:
 
     @property
     def staleness(self) -> float:
-        return self.table.snapshot_time - self.last_sync
+        """Age of the cached content at the time we last synced: snapshots
+        are zero-copy, so an unchanged registry hands back a table whose
+        ``snapshot_time`` is when its content was captured."""
+        return self.last_sync - self.table.snapshot_time

@@ -6,12 +6,19 @@ is the layered DAG of §III-A: peer p_i → p_j is a feasible handover iff
 ``layer_end(i) == layer_start(j)``; a valid chain covers [0, L).
 
 Implemented:
-  * ``gtrac_route``  — trust-floor pruning + Dijkstra on C_p (Alg. 1, lines 1–3)
+  * ``gtrac_route``  — trust-floor pruning + shortest path on C_p (Alg. 1, lines 1–3)
   * ``sp_route``     — latency-only shortest path, no trust (τ=0)
   * ``mr_route``     — max-reliability (shortest path on -log r_p)
   * ``naive_route``  — DFS enumeration + uniform sample (capped)
   * ``larac_route``  — Lagrangian relaxation for the constrained problem
   * ``brute_force_route`` — exact RBSP by enumeration (test oracle only)
+
+All shortest-path algorithms run on the snapshot-compiled CSR planner
+(core/planner.py): the layered DAG is compiled once per registry snapshot
+and each query is a vectorized numpy forward DP — the per-request heap
+Dijkstra of the seed survives as ``heap_dijkstra_route`` / the private
+``_dijkstra_layered`` strictly as a reference baseline for equivalence
+tests and before/after benchmarks.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import GTRACConfig
+from repro.core.planner import RoutePlanner, get_planner
 from repro.core.trust import effective_cost_vec
 from repro.core.types import PeerTable, RouteResult
 
@@ -36,14 +44,17 @@ _INF = float("inf")
 
 def _dijkstra_layered(table: PeerTable, mask: np.ndarray, weights: np.ndarray,
                       total_layers: int) -> Tuple[List[int], float]:
-    """Dijkstra over the layered DAG defined by (layer_start, layer_end).
+    """SEED REFERENCE PATH — per-request heap Dijkstra over the layered DAG.
 
     Nodes are *layer boundaries* 0..L; taking peer p moves from boundary
     ``layer_start[p]`` to ``layer_end[p]`` at cost ``weights[p]``. Returns
     (chain peer indices, total cost) or ([], inf).
 
     This boundary-graph formulation is exactly the pruned-subgraph search of
-    Alg. 1 line 3: a path source→sink visits one peer per hop.
+    Alg. 1 line 3: a path source→sink visits one peer per hop. Kept (not on
+    the hot path) as the oracle for planner equivalence tests and the
+    before/after baseline in ``benchmarks/bench_scaling.py``; production
+    routing goes through ``RoutePlanner.solve``.
     """
     starts = table.layer_start
     ends = table.layer_end
@@ -103,14 +114,31 @@ def _result(table: PeerTable, chain_idx: List[int], cost: float,
 
 
 def gtrac_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
-                tau: Optional[float] = None) -> RouteResult:
+                tau: Optional[float] = None,
+                planner: Optional[RoutePlanner] = None) -> RouteResult:
     t0 = time.perf_counter()
+    planner = planner or get_planner(total_layers)
     tau = cfg.trust_floor if tau is None else tau
     mask = table.alive & (table.trust >= tau)          # line 1: V'
     costs = effective_cost_vec(table.latency_ms, table.trust,
                                cfg.request_timeout_ms)  # Eq. (4)
-    chain, cost = _dijkstra_layered(table, mask, costs, total_layers)
+    chain, cost = planner.solve(table, costs, mask)
     return _result(table, chain, cost, "gtrac", t0)
+
+
+def heap_dijkstra_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
+                        tau: Optional[float] = None) -> RouteResult:
+    """The seed's per-request heap-Dijkstra G-TRAC path, unamortized.
+
+    Benchmark baseline only — same pruning and weights as ``gtrac_route``
+    but rebuilding dict buckets and running the heap loop on every call."""
+    t0 = time.perf_counter()
+    tau = cfg.trust_floor if tau is None else tau
+    mask = table.alive & (table.trust >= tau)
+    costs = effective_cost_vec(table.latency_ms, table.trust,
+                               cfg.request_timeout_ms)
+    chain, cost = _dijkstra_layered(table, mask, costs, total_layers)
+    return _result(table, chain, cost, "gtrac-heap", t0)
 
 
 # ---------------------------------------------------------------------------
@@ -118,21 +146,22 @@ def gtrac_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
 # ---------------------------------------------------------------------------
 
 
-def sp_route(table: PeerTable, total_layers: int,
-             cfg: GTRACConfig) -> RouteResult:
+def sp_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
+             planner: Optional[RoutePlanner] = None) -> RouteResult:
     """Shortest Path: minimise Σ l̂_p, τ = 0 (no trust)."""
     t0 = time.perf_counter()
-    chain, cost = _dijkstra_layered(table, table.alive, table.latency_ms,
-                                    total_layers)
+    planner = planner or get_planner(total_layers)
+    chain, cost = planner.solve(table, table.latency_ms, table.alive)
     return _result(table, chain, cost, "sp", t0)
 
 
-def mr_route(table: PeerTable, total_layers: int,
-             cfg: GTRACConfig) -> RouteResult:
+def mr_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
+             planner: Optional[RoutePlanner] = None) -> RouteResult:
     """Max-Reliability: maximise Π r_p ⇔ shortest path on -log r_p."""
     t0 = time.perf_counter()
+    planner = planner or get_planner(total_layers)
     w = -np.log(np.clip(table.trust, 1e-12, 1.0))
-    chain, cost = _dijkstra_layered(table, table.alive, w, total_layers)
+    chain, cost = planner.solve(table, w, table.alive)
     return _result(table, chain, cost, "mr", t0)
 
 
@@ -186,15 +215,18 @@ def naive_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
 
 
 def larac_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
-                epsilon: Optional[float] = None, max_iter: int = 32)\
+                epsilon: Optional[float] = None, max_iter: int = 32,
+                planner: Optional[RoutePlanner] = None)\
         -> RouteResult:
     """LARAC (Juttner et al. 2001) for the constrained shortest path.
 
     cost  c_p = C_p (effective latency, Eq. 4)
     delay d_p = -log r_p, constraint Σ d_p ≤ -log(1 - ε).
-    Iterates λ via the standard closed-form update.
+    Iterates λ via the standard closed-form update. Every ``solve`` (up to
+    ~34 per request) is one vectorized DP sweep over the cached CSR graph.
     """
     t0 = time.perf_counter()
+    planner = planner or get_planner(total_layers)
     eps = epsilon if epsilon is not None else \
         (cfg.risk_tolerance if cfg.risk_tolerance > 0 else 0.10)
     bound = -math.log(max(1e-12, 1.0 - eps))
@@ -204,7 +236,7 @@ def larac_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
     alive = table.alive
 
     def solve(w):
-        return _dijkstra_layered(table, alive, w, total_layers)
+        return planner.solve(table, w, alive)
 
     def dsum(chain):
         return float(np.sum(d[chain]))

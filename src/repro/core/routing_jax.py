@@ -86,14 +86,25 @@ def backtrack(starts, pred, *, total_layers: int, k_max: int):
 
 def route_batched(table: PeerTable, total_layers: int, cfg: GTRACConfig,
                   tau: np.ndarray, k_max: int,
-                  use_kernel: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+                  use_kernel: bool = False,
+                  planner=None) -> Tuple[np.ndarray, np.ndarray]:
     """Route a batch of requests against one cached snapshot.
 
     tau: (R,) per-request trust floors. Returns (chains (R, k_max) peer IDS
     (-1 padded), total costs (R,)). Infeasible requests get cost >= INF.
+
+    ``planner`` (a core.planner.RoutePlanner) routes the topology through
+    the same compiled snapshot as the numpy path: the jnp starts/ends
+    arrays are converted once per registry snapshot and cached on the
+    ``CompiledGraph``, so repeated batches against an unchanged registry
+    skip the host->device topology transfer for both the jnp DP and the
+    Pallas kernel backend.
     """
-    starts = jnp.asarray(table.layer_start, jnp.int32)
-    ends = jnp.asarray(table.layer_end, jnp.int32)
+    if planner is not None:
+        starts, ends = planner.compile(table).device_topology()
+    else:
+        starts = jnp.asarray(table.layer_start, jnp.int32)
+        ends = jnp.asarray(table.layer_end, jnp.int32)
     costs = effective_costs(jnp.asarray(table.latency_ms, jnp.float32),
                             jnp.asarray(table.trust, jnp.float32),
                             jnp.asarray(table.alive),

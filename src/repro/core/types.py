@@ -35,6 +35,13 @@ class PeerTable:
     """Columnar snapshot of the registry — what routing actually consumes.
 
     The seeker's cached view Σ̃_t is a (possibly stale) PeerTable.
+
+    ``version`` is the emitting registry's snapshot generation (a new
+    number whenever the table *content* changed); ``topo_version`` bumps
+    only on membership (register/deregister) changes so the route planner
+    can reuse its compiled CSR graph across trust/latency updates;
+    ``source_id`` disambiguates registries sharing a process. All three
+    are -1 for tables built outside a registry (``from_records``).
     """
 
     peer_ids: np.ndarray        # (P,) int64
@@ -44,6 +51,9 @@ class PeerTable:
     latency_ms: np.ndarray      # (P,) float64
     alive: np.ndarray           # (P,) bool
     snapshot_time: float = 0.0
+    version: int = -1
+    topo_version: int = -1
+    source_id: int = -1
 
     def __len__(self) -> int:
         return len(self.peer_ids)
@@ -75,6 +85,31 @@ class PeerTable:
         if len(idx) == 0:
             raise KeyError(peer_id)
         return int(idx[0])
+
+
+@dataclass
+class RegistryState:
+    """Columnar registry replication payload (anchor failover).
+
+    The full per-peer state of an ``AnchorRegistry`` as a handful of
+    column arrays — what primary→backup replication ships instead of a
+    ``copy.deepcopy`` of the records dict. Arrays are shared zero-copy
+    with the exporting registry's mirror except ``last_heartbeat`` (the
+    only column mutated in place); adopters materialise records lazily.
+    """
+
+    peer_ids: np.ndarray        # (P,) int64
+    layer_start: np.ndarray     # (P,) int32
+    layer_end: np.ndarray       # (P,) int32
+    trust: np.ndarray           # (P,) float64
+    latency_ms: np.ndarray      # (P,) float64
+    last_heartbeat: np.ndarray  # (P,) float64
+    successes: np.ndarray       # (P,) int64
+    failures: np.ndarray        # (P,) int64
+    profiles: List[str] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.peer_ids)
 
 
 @dataclass

@@ -1,0 +1,21 @@
+"""jax API compatibility for SPMD helpers.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(jax >= 0.8) and renamed its replication-check kwarg ``check_rep`` ->
+``check_vma`` along the way. ``shard_map_nocheck`` resolves both so callers
+get an unchecked shard_map on either release line.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map                        # jax >= 0.8
+    _CHECK_KW = "check_vma"
+except ImportError:                                  # older jax
+    from jax.experimental.shard_map import shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_nocheck(f, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled (version-agnostic)."""
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **{_CHECK_KW: False})

@@ -89,7 +89,7 @@ def pipeline_shard_map(stage_fn: Callable, mesh: Mesh, n_microbatches: int,
         zip(mesh.axis_names, mesh.devices.shape))[stage_axis]
 
     def pipelined(x):
-        from jax import shard_map  # jax >= 0.8
+        from repro.distributed.compat import shard_map_nocheck
 
         def per_stage(x_local):
             # x_local: (M, b, ...) microbatches resident on this stage
@@ -125,10 +125,9 @@ def pipeline_shard_map(stage_fn: Callable, mesh: Mesh, n_microbatches: int,
             return jax.lax.psum(out, stage_axis)
 
         spec = P(None, None)  # microbatches replicated per stage group
-        return shard_map(per_stage, mesh=mesh,
-                         in_specs=P(*([None] * x.ndim)),
-                         out_specs=P(*([None] * x.ndim)),
-                         check_vma=False)(x)
+        return shard_map_nocheck(per_stage, mesh=mesh,
+                                 in_specs=P(*([None] * x.ndim)),
+                                 out_specs=P(*([None] * x.ndim)))(x)
 
     return pipelined
 

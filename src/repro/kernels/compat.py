@@ -1,0 +1,12 @@
+"""Pallas TPU API compatibility helpers.
+
+The kernels target the current Pallas naming (``pltpu.CompilerParams``);
+older jaxlibs (< 0.5) ship the same class as ``pltpu.TPUCompilerParams``.
+Resolve once here so every kernel builds against either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

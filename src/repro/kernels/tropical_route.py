@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 INF = 3.0e38  # python literal: jnp scalars may not be captured by kernels
 
 
@@ -66,17 +68,25 @@ def tropical_route(starts, ends, costs, *, total_layers: int,
     """starts/ends (P,) i32; costs (R, P) f32 (INF = pruned).
 
     Returns (dist (R, L+1), pred (R, L+1) int32 peer index or -1).
+
+    R need not be a multiple of ``blk_r``: the request batch is padded to
+    the next block boundary with all-INF cost rows (whose DP result is the
+    infeasible vector — harmless) and the outputs sliced back to R rows.
     """
     R, P = costs.shape
     L = total_layers
     blk_r = min(blk_r, R)
-    assert R % blk_r == 0, (R, blk_r)
+    r_pad = (-R) % blk_r
+    if r_pad:
+        costs = jnp.concatenate(
+            [costs, jnp.full((r_pad, P), INF, costs.dtype)], axis=0)
+    r_total = R + r_pad
     # one-hot boundary matrix, built once outside the kernel
     starts_oh = jax.nn.one_hot(starts, L + 1, dtype=jnp.float32).T  # (L+1, P)
     kernel = functools.partial(_route_kernel, total_layers=L)
     dist, pred = pl.pallas_call(
         kernel,
-        grid=(R // blk_r,),
+        grid=(r_total // blk_r,),
         in_specs=[
             pl.BlockSpec((L + 1, P), lambda i: (0, 0)),
             pl.BlockSpec((1, P), lambda i: (0, 0)),
@@ -87,11 +97,13 @@ def tropical_route(starts, ends, costs, *, total_layers: int,
             pl.BlockSpec((blk_r, L + 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R, L + 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, L + 1), jnp.int32),
+            jax.ShapeDtypeStruct((r_total, L + 1), jnp.float32),
+            jax.ShapeDtypeStruct((r_total, L + 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(starts_oh, ends[None, :].astype(jnp.int32), costs)
+    if r_pad:
+        dist, pred = dist[:R], pred[:R]
     return dist, pred

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import GTRACConfig, ModelConfig
 from repro.core.executor import ChainExecutor, split_reports
+from repro.core.planner import RoutePlanner, plan_route
 from repro.core.registry import AnchorRegistry, SeekerCache
 from repro.core.routing import ALGORITHMS
 from repro.distributed.pipeline import StagePartition
@@ -120,6 +121,11 @@ class GTRACPipelineServer:
         self.bed = Testbed(cfg=self.gcfg, total_layers=cfg.num_layers,
                            peers=peers, anchor=anchor, rng=rng)
         self.seeker = SeekerCache(anchor, self.gcfg, now=0.0)
+        # per-server planner: compiled CSR graph + K-best plans are reused
+        # across every token routed from an unchanged registry snapshot
+        self.planner = RoutePlanner(cfg.num_layers,
+                                    k_best=self.gcfg.k_best_routes,
+                                    cache_size=self.gcfg.planner_cache_size)
         self._stage_of = {}  # layer_start -> stage idx
         for i in range(self.partition.n_stages):
             self._stage_of[self.partition.segment(i)[0]] = i
@@ -152,13 +158,22 @@ class GTRACPipelineServer:
         for _ in range(max_new_tokens):
             self.seeker.maybe_sync(self.bed.now)
             table = self.seeker.view()
-            kwargs = {"rng": self.bed.rng} if self.algorithm == "naive" else {}
-            route = route_fn(table, self.cfg.num_layers, self.gcfg, **kwargs)
+            plan = None
+            if self.algorithm == "gtrac":
+                # planner path: K-best plan cached per snapshot version
+                route, plan = plan_route(table, self.cfg.num_layers,
+                                         self.gcfg, planner=self.planner)
+            else:
+                kwargs = ({"rng": self.bed.rng}
+                          if self.algorithm == "naive" else {})
+                route = route_fn(table, self.cfg.num_layers, self.gcfg,
+                                 **kwargs)
             if not route.feasible:
                 metrics.infeasible += 1
                 break
             report, payload = executor.execute(route.chain, table,
-                                               payload=(tokens, None))
+                                               payload=(tokens, None),
+                                               plan=plan)
             for rep in split_reports(report):
                 self.bed.anchor.apply_report(rep)
             metrics.repairs += int(report.repaired)

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import GTRACConfig
 from repro.core.executor import ChainExecutor, split_reports
+from repro.core.planner import RoutePlanner, plan_route
 from repro.core.registry import SeekerCache
 from repro.core.routing import ALGORITHMS
 from repro.core.types import ExecReport, PeerTable
@@ -98,6 +99,10 @@ def run_workload(bed: Testbed, algorithm: str, n_requests: int, l_tok: int,
     route_fn = ALGORITHMS[algorithm]
     seeker = seeker or SeekerCache(bed.anchor, cfg, now=bed.now)
     stats = WorkloadStats(algorithm=algorithm, l_tok=l_tok)
+    # snapshot-compiled planner: gtrac tokens share one CSR graph + K-best
+    # failover plan per registry snapshot instead of re-searching per token
+    planner = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes,
+                           cache_size=cfg.planner_cache_size)
 
     for rid_off in range(n_requests):
         rid = request_id_base + rid_off
@@ -113,17 +118,22 @@ def run_workload(bed: Testbed, algorithm: str, n_requests: int, l_tok: int,
             # background gossip tick (off the routing critical path)
             seeker.maybe_sync(bed.now)
             table = seeker.view()
-            kwargs = {}
-            if algorithm == "larac" and epsilon is not None:
-                kwargs["epsilon"] = epsilon
-            if algorithm == "naive":
-                kwargs["rng"] = bed.rng
-            route = route_fn(table, bed.total_layers, cfg, **kwargs)
+            plan = None
+            if algorithm == "gtrac":
+                route, plan = plan_route(table, bed.total_layers, cfg,
+                                         planner=planner)
+            else:
+                kwargs = {}
+                if algorithm == "larac" and epsilon is not None:
+                    kwargs["epsilon"] = epsilon
+                if algorithm == "naive":
+                    kwargs["rng"] = bed.rng
+                route = route_fn(table, bed.total_layers, cfg, **kwargs)
             if not route.feasible:
                 success = False
                 infeasible = True
                 break
-            report, _ = executor.execute(route.chain, table)
+            report, _ = executor.execute(route.chain, table, plan=plan)
             chains.append(report.chain)
             for rep in split_reports(report):
                 bed.anchor.apply_report(rep)

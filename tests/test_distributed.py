@@ -135,9 +135,9 @@ def test_compressed_psum_error_feedback():
     the bias vanish over repeated steps."""
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import compressed_psum
+        from repro.distributed.compat import shard_map_nocheck
 
         mesh = jax.make_mesh((8,), ('data',))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
@@ -145,8 +145,9 @@ def test_compressed_psum_error_feedback():
         def one_round(g, r):
             return compressed_psum(g, 'data', r)
 
-        f = shard_map(one_round, mesh=mesh, in_specs=(P('data'), P('data')),
-                      out_specs=(P('data'), P('data')), check_vma=False)
+        f = shard_map_nocheck(one_round, mesh=mesh,
+                              in_specs=(P('data'), P('data')),
+                              out_specs=(P('data'), P('data')))
         want = jnp.mean(g, axis=0)
         r = jnp.zeros_like(g)
         acc_true = jnp.zeros(128)

@@ -1,0 +1,369 @@
+"""Snapshot-versioned CSR route planner (core/planner.py).
+
+Covers the PR's acceptance criteria: planner routes cost-identical to the
+brute-force oracle (and the seed heap-Dijkstra path), K-best alternates
+are valid feasible chains in nondecreasing cost order, version-keyed
+caching returns the identical compiled graph / table objects while the
+registry is unmutated, and mid-chain failures recover from the
+precomputed plan without a fresh search.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.core import (AnchorRegistry, ChainExecutor, brute_force_route,
+                        gtrac_route, heap_dijkstra_route, plan_route)
+from repro.core.hedging import HedgedChainExecutor
+from repro.core.planner import RoutePlanner, compile_table
+from repro.core.routing import _dijkstra_layered, enumerate_chains
+from repro.core.trust import effective_cost_vec
+from repro.core.types import ExecReport, HopReport
+
+from conftest import build_layered_anchor
+
+
+def snap(anchor, now=0.0):
+    return anchor.snapshot(now)
+
+
+# ---------------------------------------------------------------------------
+# Optimality: planner == brute force == seed heap path
+# ---------------------------------------------------------------------------
+
+
+class TestOptimality:
+    def test_cost_identical_to_brute_force(self, gcfg):
+        """Planner G-TRAC == exact enumeration over the pruned graph, on
+        random small testbeds (property-style sweep over seeds/floors)."""
+        for seed in range(8):
+            tau = [0.0, 0.6, 0.8, 0.9][seed % 4]
+            anchor = build_layered_anchor(gcfg, L=9, segments=(3,),
+                                          replicas=4, seed=seed,
+                                          trust_range=(0.55, 1.0))
+            t = snap(anchor)
+            g = gtrac_route(t, 9, gcfg, tau=tau)
+            # brute force over the SAME pruned feasible set
+            mask = t.alive & (t.trust >= tau)
+            chains = enumerate_chains(t, mask, 9)
+            if not chains:
+                assert not g.feasible
+                continue
+            costs = effective_cost_vec(t.latency_ms, t.trust,
+                                       gcfg.request_timeout_ms)
+            best = min(float(np.sum(costs[c])) for c in chains)
+            assert g.feasible
+            assert g.total_cost == pytest.approx(best)
+
+    def test_matches_seed_heap_dijkstra(self, gcfg):
+        for seed in range(6):
+            anchor = build_layered_anchor(gcfg, L=12, seed=seed)
+            t = snap(anchor)
+            for tau in (0.0, 0.7, 0.9):
+                g = gtrac_route(t, 12, gcfg, tau=tau)
+                h = heap_dijkstra_route(t, 12, gcfg, tau=tau)
+                assert g.feasible == h.feasible
+                if g.feasible:
+                    assert g.total_cost == pytest.approx(h.total_cost)
+
+    def test_brute_force_epsilon_oracle(self, gcfg):
+        """plan_route's primary equals brute_force_route when the trust
+        floor implies the epsilon bound (design-guarantee regime)."""
+        anchor = build_layered_anchor(gcfg, L=9, segments=(3,), replicas=5,
+                                      seed=3, trust_range=(0.9, 1.0))
+        t = snap(anchor)
+        tau = 0.9
+        r, _ = plan_route(t, 9, gcfg, tau=tau)
+        bf = brute_force_route(t, 9, gcfg, epsilon=1 - tau ** 3)
+        if r.feasible and bf.feasible:
+            assert bf.total_cost <= r.total_cost + 1e-9
+
+    def test_infeasible_when_all_dead(self, gcfg, layered_anchor):
+        t = snap(layered_anchor)
+        t.alive[:] = False
+        r, plan = plan_route(t, 12, gcfg, tau=0.0)
+        assert not r.feasible and not plan.feasible
+        assert plan.resume_suffix(0) is None
+
+
+# ---------------------------------------------------------------------------
+# K-best alternates
+# ---------------------------------------------------------------------------
+
+
+class TestKBest:
+    def _check_chain_valid(self, t, ids, L):
+        pos = 0
+        for pid in ids:
+            i = t.index_of(pid)
+            assert int(t.layer_start[i]) == pos
+            assert bool(t.alive[i])
+            pos = int(t.layer_end[i])
+        assert pos == L
+
+    def test_alternates_are_feasible_nondecreasing(self, gcfg):
+        for seed in range(5):
+            anchor = build_layered_anchor(gcfg, L=12, replicas=5, seed=seed)
+            t = snap(anchor)
+            r, plan = plan_route(t, 12, gcfg, tau=0.0, k=6)
+            assert r.feasible
+            costs = plan.costs
+            assert all(costs[i] <= costs[i + 1] + 1e-9
+                       for i in range(len(costs) - 1))
+            seen = set()
+            for i in range(plan.n_chains):
+                ids = tuple(plan.chain_ids(i))
+                assert ids not in seen          # distinct chains
+                seen.add(ids)
+                self._check_chain_valid(t, ids, 12)
+                # reported cost is the true chain cost
+                w = effective_cost_vec(t.latency_ms, t.trust,
+                                       gcfg.request_timeout_ms)
+                rows = [t.index_of(p) for p in ids]
+                assert costs[i] == pytest.approx(float(np.sum(w[rows])))
+
+    def test_kbest_second_best_is_true_second(self, gcfg):
+        """Alternate #1 must match the best chain found by enumeration
+        after excluding the primary."""
+        anchor = build_layered_anchor(gcfg, L=6, segments=(3,), replicas=3,
+                                      seed=1)
+        t = snap(anchor)
+        r, plan = plan_route(t, 6, gcfg, tau=0.0, k=4)
+        w = effective_cost_vec(t.latency_ms, t.trust,
+                               gcfg.request_timeout_ms)
+        chains = enumerate_chains(t, t.alive, 6)
+        all_costs = sorted(float(np.sum(w[c])) for c in chains)
+        assert plan.costs[0] == pytest.approx(all_costs[0])
+        if len(all_costs) > 1 and plan.n_chains > 1:
+            assert plan.costs[1] == pytest.approx(all_costs[1])
+
+
+# ---------------------------------------------------------------------------
+# Version-keyed caching / zero-copy snapshots
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotCaching:
+    def test_snapshot_identity_when_unmutated(self, gcfg, layered_anchor):
+        t1 = layered_anchor.snapshot(0.0)
+        t2 = layered_anchor.snapshot(1.0)
+        assert t2 is t1                      # zero-copy: same object
+        # shared object is never mutated: snapshot_time stays the capture
+        # time, so other holders' views are unaffected by this call
+        assert t2.snapshot_time == 0.0
+
+    def test_compiled_graph_identity_when_unmutated(self, gcfg,
+                                                    layered_anchor):
+        planner = RoutePlanner(12)
+        t1 = layered_anchor.snapshot(0.0)
+        g1 = planner.compile(t1)
+        t2 = layered_anchor.snapshot(0.5)
+        g2 = planner.compile(t2)
+        assert g2 is g1
+        assert planner.stats["graph_compiles"] == 1
+        assert planner.stats["graph_hits"] == 1
+
+    def test_trust_update_reuses_topology(self, gcfg, layered_anchor):
+        """apply_report invalidates the snapshot but NOT the compiled CSR
+        graph (membership unchanged)."""
+        planner = RoutePlanner(12)
+        t1 = layered_anchor.snapshot(0.0)
+        g1 = planner.compile(t1)
+        layered_anchor.apply_report(
+            ExecReport(False, [0], [HopReport(0, 5.0, False)],
+                       failed_peer=0))
+        t2 = layered_anchor.snapshot(0.0)
+        assert t2 is not t1                  # state changed -> new table
+        assert t2.trust[t2.index_of(0)] < t1.trust[t1.index_of(0)]
+        g2 = planner.compile(t2)
+        assert g2 is g1                      # same topology, same graph
+
+    def test_membership_change_recompiles(self, gcfg, layered_anchor):
+        planner = RoutePlanner(12)
+        g1 = planner.compile(layered_anchor.snapshot(0.0))
+        layered_anchor.register(999, 0, 3, now=0.0)
+        layered_anchor.heartbeat(999, 0.0)
+        g2 = planner.compile(layered_anchor.snapshot(0.0))
+        assert g2 is not g1
+        assert g2.n_peers == g1.n_peers + 1
+
+    def test_heartbeat_expiry_bumps_version(self, gcfg, layered_anchor):
+        t1 = layered_anchor.snapshot(0.0)
+        v1 = t1.version
+        assert t1.alive.all()
+        t2 = layered_anchor.snapshot(gcfg.node_ttl_s + 1.0)  # all expired
+        assert t2 is not t1
+        assert t2.version > v1
+        assert not t2.alive.any()
+
+    def test_heartbeats_keep_snapshot_warm(self, gcfg, layered_anchor):
+        """Steady-state heartbeat traffic must not invalidate the cached
+        snapshot (the in-place mirror update path)."""
+        t1 = layered_anchor.snapshot(0.0)
+        for pid in list(layered_anchor.peers):
+            layered_anchor.heartbeat(pid, 5.0)
+        t2 = layered_anchor.snapshot(6.0)
+        assert t2 is t1
+
+    def test_plan_cache_hit_on_same_snapshot(self, gcfg, layered_anchor):
+        planner = RoutePlanner(12)
+        t = layered_anchor.snapshot(0.0)
+        _, p1 = plan_route(t, 12, gcfg, tau=0.8, planner=planner)
+        _, p2 = plan_route(t, 12, gcfg, tau=0.8, planner=planner)
+        assert p2 is p1
+        assert planner.stats["plan_hits"] == 1
+        _, p3 = plan_route(t, 12, gcfg, tau=0.5, planner=planner)
+        assert p3 is not p1                  # different floor, fresh DP
+
+    def test_from_records_tables_still_work(self, gcfg):
+        """Tables without registry versioning fall back to identity keys."""
+        from repro.core.types import PeerTable, PeerRecord
+        recs = [PeerRecord(i, 0, 6, 1.0, 50.0, 0.0) for i in range(3)]
+        t = PeerTable.from_records(recs, 0.0, gcfg.node_ttl_s)
+        assert t.version == -1
+        r = gtrac_route(t, 6, gcfg, tau=0.0)
+        assert r.feasible and r.hops == 1
+
+
+# ---------------------------------------------------------------------------
+# K-best failover: mid-chain recovery without a fresh search
+# ---------------------------------------------------------------------------
+
+
+class TestPlanFailover:
+    def _anchor(self, gcfg, replicas=3):
+        return build_layered_anchor(gcfg, L=6, segments=(3,),
+                                    replicas=replicas, seed=0,
+                                    trust_range=(0.95, 1.0))
+
+    def test_executor_recovers_from_plan(self, gcfg):
+        anchor = self._anchor(gcfg)
+        t = anchor.snapshot(0.0)
+        planner = RoutePlanner(6, k_best=6)
+        r, plan = plan_route(t, 6, gcfg, tau=0.0, planner=planner)
+        assert r.feasible and len(r.chain) == 2
+        failed = r.chain[1]                  # mid-chain failure
+        solves_before = planner.stats["solves"]
+
+        def hop(pid, k, payload):
+            return payload, 10.0, pid != failed
+
+        ex = ChainExecutor(gcfg, hop)
+        report, _ = ex.execute(r.chain, t, plan=plan)
+        assert report.success
+        assert report.repaired
+        assert ex.plan_repairs == 1          # served from the plan...
+        assert planner.stats["solves"] == solves_before  # ...no new search
+        assert failed not in report.chain[1:]
+        # spliced suffix is a valid continuation
+        i = t.index_of(report.chain[1])
+        assert int(t.layer_start[i]) == 3 and int(t.layer_end[i]) == 6
+
+    def test_hedged_executor_recovers_from_plan(self, gcfg):
+        anchor = self._anchor(gcfg)
+        t = anchor.snapshot(0.0)
+        planner = RoutePlanner(6, k_best=6)
+        r, plan = plan_route(t, 6, gcfg, tau=0.0, planner=planner)
+        failed = r.chain[0]
+        solves_before = planner.stats["solves"]
+        calls = []
+
+        def hop(pid, k, payload):
+            calls.append(pid)
+            # fail the primary AND its same-segment hedge candidates on the
+            # first hop attempt round, succeed for everyone else
+            return payload, 10.0, pid != failed
+
+        ex = HedgedChainExecutor(gcfg, hop, quantile_factor=1e9)
+        report, _ = ex.execute(r.chain, t, plan=plan)
+        assert report.success
+        assert planner.stats["solves"] == solves_before
+
+    def test_hedged_splice_excludes_failed_hedge_peer(self, gcfg):
+        """When the hedge peer itself fails, the plan splice must not hand
+        back that same peer (it would burn the one-shot repair)."""
+        anchor = self._anchor(gcfg, replicas=4)
+        t = anchor.snapshot(0.0)
+        planner = RoutePlanner(6, k_best=8)
+        r, plan = plan_route(t, 6, gcfg, tau=0.0, planner=planner)
+        primary = r.chain[0]
+        # the hedge peer find_replacement would pick: cheapest same-segment
+        from repro.core.executor import find_replacement
+        hidx = find_replacement(t, t.index_of(primary), 0.0)
+        hedge_peer = int(t.peer_ids[hidx])
+        dead = {primary, hedge_peer}
+
+        def hop(pid, k, payload):
+            return payload, 10.0, pid not in dead
+
+        ex = HedgedChainExecutor(gcfg, hop, quantile_factor=1e9)
+        report, _ = ex.execute(r.chain, t, tau=0.0, plan=plan)
+        assert report.success
+        assert ex.plan_repairs == 1
+        assert not dead.intersection(report.chain)
+
+    def test_resume_suffix_prefers_cheapest(self, gcfg):
+        anchor = self._anchor(gcfg, replicas=4)
+        t = anchor.snapshot(0.0)
+        _, plan = plan_route(t, 6, gcfg, tau=0.0, k=8)
+        failed = plan.chain_ids(0)[1]
+        suffix = plan.resume_suffix(3, exclude={failed})
+        assert suffix is not None and failed not in suffix
+        w = effective_cost_vec(t.latency_ms, t.trust,
+                               gcfg.request_timeout_ms)
+        # cheapest same-segment survivor
+        cands = [(float(w[i]), int(t.peer_ids[i])) for i in range(len(t))
+                 if int(t.layer_start[i]) == 3
+                 and int(t.peer_ids[i]) != failed]
+        assert suffix[0] == min(cands)[1]
+
+    def test_full_alternate_excludes(self, gcfg):
+        anchor = self._anchor(gcfg)
+        t = anchor.snapshot(0.0)
+        _, plan = plan_route(t, 6, gcfg, tau=0.0, k=8)
+        primary = plan.chain_ids(0)
+        alt = plan.full_alternate(exclude=set(primary[:1]))
+        if alt is not None:
+            assert primary[0] not in alt
+
+
+# ---------------------------------------------------------------------------
+# CSR compile edge cases
+# ---------------------------------------------------------------------------
+
+
+class TestCompile:
+    def test_out_of_range_segments_excluded(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        a.register(0, 0, 3, now=0.0)
+        a.register(1, 3, 6, now=0.0)
+        a.register(2, 3, 9, now=0.0)          # overshoots L=6: useless
+        a.register(3, 4, 4, now=0.0)          # degenerate: start == end
+        for pid in range(4):
+            a.heartbeat(pid, 0.0)
+        t = a.snapshot(0.0)
+        g = compile_table(t, 6)
+        assert len(g.order) == 2              # only peers 0 and 1 remain
+        r = gtrac_route(t, 6, gcfg, tau=0.0)
+        assert r.feasible and r.chain == [0, 1]
+
+    def test_empty_registry(self, gcfg):
+        a = AnchorRegistry(gcfg)
+        t = a.snapshot(0.0)
+        r = gtrac_route(t, 6, gcfg, tau=0.0)
+        assert not r.feasible
+
+    def test_heap_reference_agreement_randomized(self, gcfg):
+        """Planner.solve vs _dijkstra_layered on random weights/masks."""
+        rng = np.random.default_rng(7)
+        anchor = build_layered_anchor(gcfg, L=12, seed=2)
+        t = snap(anchor)
+        planner = RoutePlanner(12)
+        for _ in range(10):
+            w = rng.uniform(1, 500, size=len(t))
+            mask = t.alive & (rng.random(len(t)) > 0.3)
+            c1, d1 = planner.solve(t, w, mask)
+            c2, d2 = _dijkstra_layered(t, mask, w, 12)
+            if d2 == float("inf"):
+                assert d1 == float("inf")
+            else:
+                assert d1 == pytest.approx(d2)

@@ -2,7 +2,7 @@
 risk-bound properties (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import GTRACConfig
 from repro.core import (brute_force_route, gtrac_route, k_max, larac_route,

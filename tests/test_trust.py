@@ -3,7 +3,7 @@ staleness, and the jitted JAX twin."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import GTRACConfig
 from repro.core import AnchorRegistry, SeekerCache
@@ -85,7 +85,9 @@ class TestGossip:
         a = AnchorRegistry(gcfg)
         a.register(0, 0, 3, now=0.0)
         cache = SeekerCache(a, gcfg, now=0.0)
-        a.peers[0].trust = 0.123
+        # via the registry API: direct record writes bypass the versioned
+        # snapshot cache (see registry.py snapshot-versioning contract)
+        a.set_trust(0, 0.123)
         # before T_gossip: stale view unchanged
         assert not cache.maybe_sync(gcfg.gossip_period_s / 2)
         assert cache.view().trust[0] != pytest.approx(0.123)
