@@ -1,19 +1,24 @@
 # Verify loop for the G-TRAC reproduction. Targets:
 #   make test          tier-1 suite (the ROADMAP command)
 #   make bench-routing routing scaling bench -> BENCH_routing.json
+#   make bench-serving window-batched router bench -> BENCH_serving.json
+#                      (FAILS unless batched >= 3x per-token loop at R=64)
 #   make lint          compile-check + pyflakes (if installed)
 
 PY        ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench-routing lint
+.PHONY: test bench-routing bench-serving lint
 
 test:
 	$(PY) -m pytest -x -q
 
 bench-routing:
 	$(PY) -m benchmarks.bench_scaling
+
+bench-serving:
+	$(PY) -m benchmarks.bench_serving
 
 lint:
 	$(PY) -m compileall -q src benchmarks tests examples

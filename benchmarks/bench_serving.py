@@ -1,0 +1,158 @@
+"""Window-batched serving router overhead: per-token ``plan_route`` loop
+vs ONE batched device DP per window (serving/batch_router.plan_batched),
+at R ∈ {16, 64, 256} concurrent streams on the paper's 336-peer testbed,
+plus end-to-end tokens/sec on the sim pipeline server.
+
+Each request carries its own trust floor (the (R,) tau vector), so the
+per-token baseline honestly pays one K-best numpy DP per request — the
+regime the window router amortizes into a single compiled batched solve.
+Both paths share the same warm ``RoutePlanner`` compiled snapshot.
+
+Emits BENCH_serving.json via benchmarks/common and GATES the result: the
+batched path must beat the per-token loop by >= 3x at R = 64 on an
+unchanged registry (exit 1 otherwise) — the PR's acceptance criterion.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.configs.base import GTRACConfig
+from repro.core.planner import RoutePlanner, plan_route
+from repro.serving.batch_router import plan_batched
+from repro.sim.testbed import build_paper_testbed
+
+GATE_R = 64
+GATE_X = 3.0
+SIZES = (16, 64, 256)
+
+
+def _per_call_us(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_routing_overhead(cfg: GTRACConfig, trials: int, seed: int):
+    bed = build_paper_testbed(cfg=cfg, seed=seed)
+    t = bed.anchor.snapshot(0.0)
+    L = bed.total_layers
+    planner = RoutePlanner(L, k_best=cfg.k_best_routes)
+    planner.compile(t)          # warm: both paths route the same snapshot
+    rng = np.random.default_rng(seed)
+    speedups = {}
+    for R in SIZES:
+        # distinct per-request floors: the per-token loop cannot collapse
+        # them into one cached plan, exactly like per-request floors in
+        # production (plan cache is version×tau keyed)
+        taus = np.sort(rng.uniform(0.5, 0.9, R))
+
+        def loop():
+            for tau in taus:
+                plan_route(t, L, cfg, tau=float(tau), planner=planner)
+
+        def batched():
+            plan_batched(t, L, cfg, taus, planner=planner,
+                         k_best=cfg.k_best_routes)   # backend="auto"
+
+        def batched_jnp():
+            plan_batched(t, L, cfg, taus, planner=planner,
+                         k_best=cfg.k_best_routes, backend="jnp")
+
+        batched()               # warm-up
+        batched_jnp()           # jit warm-up + device snapshot upload
+        loop()
+        reps = max(3, trials // 10)
+        loop_us = _per_call_us(loop, reps) / R
+        bat_us = _per_call_us(batched, reps) / R
+        jnp_us = _per_call_us(batched_jnp, 3) / R
+        speedups[R] = loop_us / bat_us
+        emit(f"serving/per_token_loop/R{R}", loop_us,
+             f"{loop_us:.1f}us_per_request")
+        emit(f"serving/window_batched/R{R}", bat_us,
+             f"{bat_us:.1f}us_per_request_{speedups[R]:.2f}x_vs_loop")
+        # informational: the device DP path (the TPU-deploy backend; on
+        # this CPU container it pays XLA loop/gather overhead)
+        emit(f"serving/window_batched_jnp/R{R}", jnp_us,
+             f"{jnp_us:.1f}us_per_request")
+    return speedups
+
+
+def bench_end_to_end(seed: int = 0):
+    """Tokens/sec (wall clock) of the routed sim pipeline: per-token
+    ``generate`` loop vs window-batched ``run_queue``, same streams."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    from repro.serving.gtrac_serve import GTRACPipelineServer
+
+    cfg = get_config("gpt2-large").reduced(num_layers=4, vocab_size=128,
+                                           remat=False)
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    streams, tokens = 4, 6
+    prompt = np.arange(1, 9)
+
+    def serve(windowed: bool) -> float:
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, seed=seed)
+        if windowed:
+            for _ in range(streams):
+                srv.submit(prompt, max_new_tokens=tokens)
+            srv.run_queue()     # warm-up compile pass
+            srv2 = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                       replicas={"golden": 2}, seed=seed)
+            for _ in range(streams):
+                srv2.submit(prompt, max_new_tokens=tokens)
+            t0 = time.perf_counter()
+            done = srv2.run_queue()
+            dt = time.perf_counter() - t0
+            n = sum(r.metrics.tokens for r in done)
+        else:
+            srv.generate(prompt, max_new_tokens=tokens)  # warm-up
+            srv2 = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                       replicas={"golden": 2}, seed=seed)
+            t0 = time.perf_counter()
+            n = 0
+            for rid in range(streams):
+                _, met = srv2.generate(prompt, max_new_tokens=tokens,
+                                       request_id=rid)
+                n += met.tokens
+            dt = time.perf_counter() - t0
+        return n / dt
+
+    tps_loop = serve(windowed=False)
+    tps_win = serve(windowed=True)
+    emit("serving/e2e/tokens_per_s/per_token", 1e6 / tps_loop,
+         f"{tps_loop:.1f}tok_per_s")
+    emit("serving/e2e/tokens_per_s/windowed", 1e6 / tps_win,
+         f"{tps_win:.1f}tok_per_s")
+    return {"per_token": round(tps_loop, 2), "windowed": round(tps_win, 2)}
+
+
+def run(trials: int = 50, seed: int = 0):
+    cfg = GTRACConfig()
+    speedups = bench_routing_overhead(cfg, trials, seed)
+    e2e = bench_end_to_end(seed)
+    gate_ok = speedups[GATE_R] >= GATE_X
+    emit("serving/gate", 0.0,
+         f"batched_vs_loop_at_R{GATE_R}:{speedups[GATE_R]:.2f}x"
+         f"(>= {GATE_X}x:{gate_ok})")
+    write_json("BENCH_serving.json", prefix="serving/",
+               extra={"bench": "bench_serving", "trials": trials,
+                      "speedup_loop_vs_batched": {
+                          str(r): round(s, 3) for r, s in speedups.items()},
+                      "tokens_per_s": e2e,
+                      "gate_R64_3x": bool(gate_ok)})
+    if not gate_ok:
+        print(f"GATE FAILED: window-batched routing only "
+              f"{speedups[GATE_R]:.2f}x vs per-token loop at R={GATE_R} "
+              f"(need >= {GATE_X}x)", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    run()

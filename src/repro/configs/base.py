@@ -267,6 +267,15 @@ class GTRACConfig:
     k_best_routes: int = 4
     # compiled snapshots / cached plans kept per planner (LRU)
     planner_cache_size: int = 8
+    # registry sweeps (registry.AnchorRegistry.sweep, run once per serving
+    # window): peers dead longer than ttl_expire_factor × node_ttl_s are
+    # bulk-deregistered with one numpy mask (<= 0 disables), and trust
+    # decays toward init_trust at trust_decay_rate per second (0 disables)
+    ttl_expire_factor: float = 0.0
+    trust_decay_rate: float = 0.0
+    # serving window router (serving/batch_router.py): max concurrent
+    # streams admitted per token window
+    router_max_batch: int = 64
 
 
 def asdict(cfg) -> dict:

@@ -83,6 +83,7 @@ class CompiledGraph:
     starts_sorted: np.ndarray  # (E,) int64 layer_start[order]
     indptr: np.ndarray         # (L+2,) int64 CSR offsets by end boundary
     segs: List[Tuple[int, int, int]]   # (boundary, lo, hi) non-empty buckets
+    valid: Optional[np.ndarray] = None  # (P,) topology-validity mask
     key: Tuple = ()            # cache key this graph was compiled under
     source_table: Optional[PeerTable] = None
     _device: dict = field(default_factory=dict, repr=False)
@@ -98,6 +99,23 @@ class CompiledGraph:
                 jnp.asarray(t.layer_end, jnp.int32),
             )
         return self._device["topo"]
+
+    def device_state(self, table: PeerTable):
+        """jnp (latency, trust, alive∧valid) for ``table``, cached by the
+        registry snapshot ``version`` so repeated device batches against
+        an unchanged registry skip the host->device upload entirely.
+        ``alive`` folds in the topology-validity mask (the CSR compile
+        filters degenerate segments; the dense device path masks them)."""
+        key = (getattr(table, "version", -1), id(table))
+        hit = self._device.get("state")
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        import jax.numpy as jnp
+        arrs = (jnp.asarray(table.latency_ms, jnp.float32),
+                jnp.asarray(table.trust, jnp.float32),
+                jnp.asarray(table.alive & self.valid))
+        self._device["state"] = (key, arrs)
+        return arrs
 
 
 def compile_table(table: PeerTable, total_layers: int) -> CompiledGraph:
@@ -120,8 +138,25 @@ def compile_table(table: PeerTable, total_layers: int) -> CompiledGraph:
         starts_sorted=starts[order],
         indptr=indptr,
         segs=segs,
+        valid=valid,
         source_table=table,
     )
+
+
+def _edge_disjoint_order(chains: List[List[int]], costs: List[float])\
+        -> Tuple[List[List[int]], List[float]]:
+    """Order alternates edge-disjoint-preferring: among equal-cost
+    alternates, chains sharing fewer peers with the primary come first.
+    Shared by the numpy DP and the device (batched) plan builder so plans
+    from either backend are identical."""
+    if len(chains) <= 2:
+        return chains, costs
+    primary = set(chains[0])
+    alts = sorted(
+        zip(chains[1:], costs[1:]),
+        key=lambda cc: (cc[1], len(primary.intersection(cc[0]))))
+    return (chains[:1] + [c for c, _ in alts],
+            costs[:1] + [c for _, c in alts])
 
 
 # ---------------------------------------------------------------------------
@@ -229,7 +264,7 @@ class RoutePlanner:
             OrderedDict()
         self.stats: Dict[str, int] = {
             "graph_compiles": 0, "graph_hits": 0,
-            "solves": 0, "plan_hits": 0,
+            "solves": 0, "plan_hits": 0, "batched_solves": 0,
         }
 
     # -- compilation ---------------------------------------------------------
@@ -292,13 +327,19 @@ class RoutePlanner:
         return chain, float(dist[L])
 
     def solve_kbest(self, table: PeerTable, weights: np.ndarray,
-                    mask: np.ndarray, k: Optional[int] = None)\
+                    mask: np.ndarray, k: Optional[int] = None,
+                    reorder: bool = True)\
             -> Tuple[List[List[int]], List[float]]:
         """Top-K distinct chains in nondecreasing cost order.
 
         The DP carries the K best (distance, predecessor edge, predecessor
         rank) per boundary; candidates per boundary are the (m, K) matrix
-        of bucket-edge extensions, reduced with one argpartition."""
+        of bucket-edge extensions, reduced with one stable argsort — ties
+        broken by (value, bucket edge, rank), the exact order the device
+        backends (``routing_jax.layered_dp_kbest`` / the Pallas kernel)
+        produce, so plans are backend-independent. ``reorder=False`` skips
+        the edge-disjoint-preferring alternate reordering (raw DP rank
+        order, used by the parity tests)."""
         self.stats["solves"] += 1
         k = self.k_best if k is None else int(k)
         if k <= 1:
@@ -315,11 +356,7 @@ class RoutePlanner:
         for b, lo, hi in g.segs:
             cand = distK[ss[lo:hi]] + w[lo:hi, None]   # (m, k)
             flat = cand.ravel()
-            if flat.size > k:
-                sel = np.argpartition(flat, k - 1)[:k]
-            else:
-                sel = np.arange(flat.size)
-            sel = sel[np.argsort(flat[sel], kind="stable")]
+            sel = np.argsort(flat, kind="stable")[:k]
             vals = flat[sel]
             nf = int(np.searchsorted(vals, _INF))
             if nf:
@@ -341,16 +378,70 @@ class RoutePlanner:
             rows.reverse()
             chains.append(rows)
             costs.append(float(distK[L, r]))
-        if len(chains) > 2:
-            # edge-disjoint-preferring: among equal-cost alternates, put
-            # chains sharing fewer peers with the primary first
-            primary = set(chains[0])
-            alts = sorted(
-                zip(chains[1:], costs[1:]),
-                key=lambda cc: (cc[1], len(primary.intersection(cc[0]))))
-            chains = chains[:1] + [c for c, _ in alts]
-            costs = costs[:1] + [c for _, c in alts]
+        if reorder:
+            chains, costs = _edge_disjoint_order(chains, costs)
         return chains, costs
+
+    def solve_kbest_batched(self, table: PeerTable, weights: np.ndarray,
+                            masks: np.ndarray, k: Optional[int] = None,
+                            reorder: bool = True)\
+            -> Tuple[List[List[List[int]]], List[List[float]]]:
+        """R requests' K-best chains from ONE vectorized DP sweep.
+
+        ``weights`` (P,) shared costs; ``masks`` (R, P) per-request
+        pruning (each row its own trust floor). The DP carries an
+        (R, L+1, K) state and reduces every boundary bucket for all
+        requests at once — the host-side twin of the device backends
+        (``routing_jax.layered_dp_kbest`` / the Pallas kernel), with the
+        identical stable (value, edge, rank) tie-break, so each request's
+        chains are bit-identical to a per-request ``solve_kbest``. This
+        is the serving window router's CPU backend: O(L) numpy segment
+        reductions amortized over the whole window instead of R Python
+        DP loops. Returns (chains_per_request, costs_per_request)."""
+        self.stats["batched_solves"] += 1
+        k = self.k_best if k is None else int(k)
+        g = self.compile(table)
+        L = g.total_layers
+        R = masks.shape[0]
+        w = np.where(masks, weights[None, :], _INF)[:, g.order]   # (R, E)
+        distK = np.full((R, L + 1, k), _INF)
+        distK[:, 0, 0] = 0.0
+        pedge = np.full((R, L + 1, k), -1, np.int64)
+        prank = np.full((R, L + 1, k), -1, np.int64)
+        ss = g.starts_sorted
+        for b, lo, hi in g.segs:
+            cand = distK[:, ss[lo:hi], :] + w[:, lo:hi, None]  # (R, m, k)
+            flat = cand.reshape(R, -1)
+            sel = np.argsort(flat, axis=1, kind="stable")[:, :k]
+            vals = np.take_along_axis(flat, sel, axis=1)
+            ok = vals < _INF
+            distK[:, b, :] = np.where(ok, vals, _INF)
+            pedge[:, b, :] = np.where(ok, lo + sel // k, -1)
+            prank[:, b, :] = np.where(ok, sel % k, -1)
+        chains_all: List[List[List[int]]] = []
+        costs_all: List[List[float]] = []
+        order = g.order
+        for r in range(R):
+            chains: List[List[int]] = []
+            costs: List[float] = []
+            for j in range(k):
+                if not distK[r, L, j] < _INF:
+                    break
+                rows: List[int] = []
+                b, rank = L, j
+                while b > 0:
+                    e = int(pedge[r, b, rank])
+                    rows.append(int(order[e]))
+                    rank = int(prank[r, b, rank])
+                    b = int(ss[e])
+                rows.reverse()
+                chains.append(rows)
+                costs.append(float(distK[r, L, j]))
+            if reorder:
+                chains, costs = _edge_disjoint_order(chains, costs)
+            chains_all.append(chains)
+            costs_all.append(costs)
+        return chains_all, costs_all
 
     # -- plans ---------------------------------------------------------------
 

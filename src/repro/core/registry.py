@@ -46,7 +46,7 @@ class _Mirror:
 
     __slots__ = ("peer_ids", "layer_start", "layer_end", "trust",
                  "latency_ms", "last_heartbeat", "successes", "failures",
-                 "profiles", "index")
+                 "profiles", "_index")
 
     def __init__(self, records: List[PeerRecord]):
         n = len(records)
@@ -66,7 +66,30 @@ class _Mirror:
         self.failures = np.fromiter((r.failures for r in records),
                                     np.int64, n)
         self.profiles = [r.profile for r in records]
-        self.index = {int(p): i for i, p in enumerate(self.peer_ids)}
+        self._index = None
+
+    @classmethod
+    def from_state(cls, state: RegistryState) -> "_Mirror":
+        """Column-array construction (sweep / adopt path): O(#columns),
+        no PeerRecord objects touched."""
+        m = cls.__new__(cls)
+        m.peer_ids = state.peer_ids
+        m.layer_start = state.layer_start
+        m.layer_end = state.layer_end
+        m.trust = state.trust
+        m.latency_ms = state.latency_ms
+        m.last_heartbeat = state.last_heartbeat
+        m.successes = state.successes
+        m.failures = state.failures
+        m.profiles = state.profiles
+        m._index = None
+        return m
+
+    @property
+    def index(self) -> Dict[int, int]:
+        if self._index is None:   # built lazily: sweeps never pay for it
+            self._index = {int(p): i for i, p in enumerate(self.peer_ids)}
+        return self._index
 
 
 class AnchorRegistry:
@@ -82,6 +105,7 @@ class AnchorRegistry:
         self.topo_version = 0   # membership changes only
         self._mirror: Optional[_Mirror] = None
         self._table: Optional[PeerTable] = None
+        self._last_sweep = 0.0
 
     # -- record access -------------------------------------------------------
 
@@ -160,6 +184,61 @@ class AnchorRegistry:
         ttl = self.cfg.node_ttl_s
         return [r for r in self.peers.values()
                 if (now - r.last_heartbeat) <= ttl]
+
+    def sweep(self, now: float, *, expire_after_s: Optional[float] = None,
+              decay_rate: Optional[float] = None) -> int:
+        """Vectorized TTL expiry + trust decay over the columnar mirror.
+
+        One numpy mask per sweep: peers whose last heartbeat is older than
+        ``expire_after_s`` (default ``ttl_expire_factor × node_ttl_s``;
+        a factor <= 0 disables expiry) are bulk-deregistered, and the
+        survivors' trust decays exponentially toward ``init_trust`` at
+        ``decay_rate`` (default ``trust_decay_rate``, per second since the
+        last sweep; 0 disables). O(#columns): the new mirror is built by
+        array slicing (``_Mirror.from_state``) and records rematerialize
+        lazily through the ``adopt_state`` machinery — no per-record
+        Python loop on the sweep path. Returns the number of peers
+        expired; a sweep with nothing to do leaves versions (and thus
+        every snapshot/plan cache) untouched.
+        """
+        if expire_after_s is None:
+            expire_after_s = self.cfg.ttl_expire_factor * self.cfg.node_ttl_s
+        rate = self.cfg.trust_decay_rate if decay_rate is None \
+            else float(decay_rate)
+        dt = max(0.0, now - self._last_sweep)
+        self._last_sweep = now
+        m = self._ensure_mirror()
+        n = len(m.peer_ids)
+        if n == 0:
+            return 0
+        keep = ((now - m.last_heartbeat) <= expire_after_s
+                if expire_after_s > 0 else np.ones(n, bool))
+        n_expired = int(n - keep.sum())
+        decaying = rate > 0.0 and dt > 0.0
+        if n_expired == 0 and not decaying:
+            return 0
+        trust = m.trust[keep]
+        if decaying:
+            f = float(np.exp(-rate * dt))
+            trust = self.cfg.init_trust + (trust - self.cfg.init_trust) * f
+            np.clip(trust, self.cfg.min_trust, self.cfg.max_trust,
+                    out=trust)
+        state = RegistryState(
+            peer_ids=m.peer_ids[keep], layer_start=m.layer_start[keep],
+            layer_end=m.layer_end[keep], trust=trust,
+            latency_ms=m.latency_ms[keep],
+            last_heartbeat=m.last_heartbeat[keep],
+            successes=m.successes[keep], failures=m.failures[keep],
+            profiles=[p for p, k in zip(m.profiles, keep) if k],
+        )
+        self._pending_state = state
+        self._peers = {}
+        self.version += 1
+        if n_expired:
+            self.topo_version += 1
+        self._mirror = _Mirror.from_state(state)
+        self._table = None
+        return n_expired
 
     # -- feedback (Alg. 1 line 16: UPDATETRUST) ------------------------------
 

@@ -66,6 +66,52 @@ def layered_dp(starts, ends, costs, *, total_layers: int):
     return dist, pred
 
 
+@functools.partial(jax.jit, static_argnames=("total_layers", "k_best"))
+def layered_dp_kbest(starts, ends, costs, *, total_layers: int, k_best: int):
+    """K-best min-plus DP: top-K (dist, pred-edge, pred-rank) per boundary.
+
+    Mirrors ``planner.RoutePlanner.solve_kbest``'s predecessor retention on
+    device: per boundary the (P, K) extension candidates are reduced to the
+    K smallest by K rounds of (min, argmin, mask) — identical tie-breaking
+    to a stable sort by (value, peer index, rank), matching both the numpy
+    planner DP and the Pallas kernel bit-for-bit.
+
+    Returns (distK (R, L+1, K), pedge (R, L+1, K) peer index or -1,
+    prank (R, L+1, K) predecessor rank or -1), nondecreasing along K.
+    """
+    R, P = costs.shape
+    L, K = total_layers, k_best
+
+    distK0 = jnp.full((R, L + 1, K), INF).at[:, 0, 0].set(0.0)
+    pedge0 = jnp.full((R, L + 1, K), -1, jnp.int32)
+    prank0 = jnp.full((R, L + 1, K), -1, jnp.int32)
+    sidx = jnp.clip(starts, 0, L)
+
+    def body(b, carry):
+        distK, pedge, prank = carry
+        d_start = jnp.take(distK, sidx, axis=1)              # (R, P, K)
+        cand = jnp.where(ends[None, :, None] == b,
+                         d_start + costs[:, :, None], INF)
+        flat = cand.reshape(R, P * K)
+        col = jax.lax.iota(jnp.int32, P * K)[None, :]
+        vals, args = [], []
+        for _ in range(K):
+            m = jnp.min(flat, axis=1)
+            a = jnp.argmin(flat, axis=1).astype(jnp.int32)
+            vals.append(m)
+            args.append(a)
+            flat = jnp.where(col == a[:, None], INF, flat)
+        m = jnp.stack(vals, axis=1)                          # (R, K)
+        a = jnp.stack(args, axis=1)
+        ok = m < INF
+        distK = distK.at[:, b, :].set(jnp.where(ok, m, INF))
+        pedge = pedge.at[:, b, :].set(jnp.where(ok, a // K, -1))
+        prank = prank.at[:, b, :].set(jnp.where(ok, a % K, -1))
+        return distK, pedge, prank
+
+    return jax.lax.fori_loop(1, L + 1, body, (distK0, pedge0, prank0))
+
+
 @functools.partial(jax.jit, static_argnames=("total_layers", "k_max"))
 def backtrack(starts, pred, *, total_layers: int, k_max: int):
     """Reconstruct chains: (R, k_max) peer indices, -1 padded, stage order."""
@@ -84,36 +130,93 @@ def backtrack(starts, pred, *, total_layers: int, k_max: int):
     return hops[:, ::-1]                             # stage order, -1 padded
 
 
+@functools.partial(jax.jit, static_argnames=("total_layers", "k_max"))
+def backtrack_kbest(starts, pedge, prank, *, total_layers: int, k_max: int):
+    """Batched K-best backtrack: all R×K chains reconstructed in lockstep.
+
+    pedge/prank: (R, L+1, K) from ``layered_dp_kbest`` (or the Pallas
+    kernel). Returns (R, K, k_max) peer indices in stage order, -1 padded;
+    row (r, j) is request r's j-th cheapest chain.
+    """
+    R, Lp1, K = pedge.shape
+    pe = pedge.reshape(R, Lp1 * K)
+    pr = prank.reshape(R, Lp1 * K)
+
+    def body(carry, _):
+        b, rank = carry                              # (R, K) each
+        idx = jnp.clip(b * K + rank, 0, Lp1 * K - 1)
+        e = jnp.take_along_axis(pe, idx, axis=1)
+        nr = jnp.take_along_axis(pr, idx, axis=1)
+        valid = (b > 0) & (rank >= 0) & (e >= 0)
+        nb = jnp.where(valid, starts[jnp.clip(e, 0)], b).astype(jnp.int32)
+        rank = jnp.where(valid, nr, rank).astype(jnp.int32)
+        return (nb, rank), jnp.where(valid, e, -1)
+
+    b0 = jnp.full((R, K), total_layers, jnp.int32)
+    r0 = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[None, :], (R, K))
+    _, hops = jax.lax.scan(body, (b0, r0), None, length=k_max)
+    hops = jnp.moveaxis(hops, 0, 2)                  # (R, K, k_max)
+    return hops[:, :, ::-1]                          # stage order, -1 padded
+
+
+def _device_inputs(table: PeerTable, total_layers: int, cfg: GTRACConfig,
+                   tau: np.ndarray, planner):
+    """(starts, ends, costs (R, P)) on device, snapshot-cached via planner.
+
+    With a ``planner`` the topology AND the per-snapshot state arrays
+    (latency / trust / alive∧valid) come from the ``CompiledGraph``'s
+    device cache, keyed by the registry ``version`` — repeated batches
+    against an unchanged registry re-upload only the (R,) tau vector.
+    """
+    if planner is not None:
+        g = planner.compile(table)
+        starts, ends = g.device_topology()
+        lat, trust, alive = g.device_state(table)
+    else:
+        starts = jnp.asarray(table.layer_start, jnp.int32)
+        ends = jnp.asarray(table.layer_end, jnp.int32)
+        ls = np.asarray(table.layer_start)
+        le = np.asarray(table.layer_end)
+        # planner.compile_table's validity predicate (no compiled graph
+        # to read it from on this branch)
+        valid = (ls >= 0) & (ls < le) & (le <= total_layers)
+        lat = jnp.asarray(table.latency_ms, jnp.float32)
+        trust = jnp.asarray(table.trust, jnp.float32)
+        alive = jnp.asarray(table.alive & valid)
+    costs = effective_costs(lat, trust, alive,
+                            jnp.asarray(tau, jnp.float32),
+                            cfg.request_timeout_ms)
+    return starts, ends, costs
+
+
 def route_batched(table: PeerTable, total_layers: int, cfg: GTRACConfig,
                   tau: np.ndarray, k_max: int,
                   use_kernel: bool = False,
-                  planner=None) -> Tuple[np.ndarray, np.ndarray]:
+                  planner=None,
+                  interpret: bool = False) -> Tuple[np.ndarray, np.ndarray]:
     """Route a batch of requests against one cached snapshot.
 
     tau: (R,) per-request trust floors. Returns (chains (R, k_max) peer IDS
     (-1 padded), total costs (R,)). Infeasible requests get cost >= INF.
 
     ``planner`` (a core.planner.RoutePlanner) routes the topology through
-    the same compiled snapshot as the numpy path: the jnp starts/ends
-    arrays are converted once per registry snapshot and cached on the
-    ``CompiledGraph``, so repeated batches against an unchanged registry
-    skip the host->device topology transfer for both the jnp DP and the
+    the same compiled snapshot as the numpy path: the jnp starts/ends and
+    latency/trust/alive arrays are converted once per registry snapshot
+    (see ``_device_inputs``), so repeated batches against an unchanged
+    registry skip the host->device transfer for both the jnp DP and the
     Pallas kernel backend.
     """
-    if planner is not None:
-        starts, ends = planner.compile(table).device_topology()
-    else:
-        starts = jnp.asarray(table.layer_start, jnp.int32)
-        ends = jnp.asarray(table.layer_end, jnp.int32)
-    costs = effective_costs(jnp.asarray(table.latency_ms, jnp.float32),
-                            jnp.asarray(table.trust, jnp.float32),
-                            jnp.asarray(table.alive),
-                            jnp.asarray(tau, jnp.float32),
-                            cfg.request_timeout_ms)
+    tau = np.asarray(tau)
+    if tau.shape[0] == 0:                  # degenerate: nothing to route
+        return (np.full((0, k_max), -1, np.int64),
+                np.full((0,), float(INF), np.float32))
+    starts, ends, costs = _device_inputs(table, total_layers, cfg, tau,
+                                         planner)
     if use_kernel:
         from repro.kernels import ops
         dist, pred = ops.tropical_route(starts, ends, costs,
-                                        total_layers=total_layers)
+                                        total_layers=total_layers,
+                                        interpret=interpret)
     else:
         dist, pred = layered_dp(starts, ends, costs,
                                 total_layers=total_layers)
@@ -122,3 +225,37 @@ def route_batched(table: PeerTable, total_layers: int, cfg: GTRACConfig,
     ids = np.where(hops_np >= 0, table.peer_ids[np.clip(hops_np, 0, None)],
                    -1)
     return ids, np.asarray(dist[:, total_layers])
+
+
+def route_batched_kbest(table: PeerTable, total_layers: int,
+                        cfg: GTRACConfig, tau: np.ndarray, k_max: int,
+                        k_best: int,
+                        use_kernel: bool = False,
+                        planner=None,
+                        interpret: bool = False)\
+        -> Tuple[np.ndarray, np.ndarray]:
+    """K-best batched routing: one device DP for R requests × K alternates.
+
+    Returns (hops (R, K, k_max) peer ROW indices into ``table`` (-1
+    padded), costs (R, K) nondecreasing along K; infeasible slots get cost
+    >= INF). Row indices (not peer ids) so callers can build
+    ``planner.RoutePlan`` objects — the same failover contract as the
+    numpy path — without a reverse id lookup.
+    """
+    tau = np.asarray(tau)
+    if tau.shape[0] == 0:
+        return (np.full((0, k_best, k_max), -1, np.int64),
+                np.full((0, k_best), float(INF), np.float32))
+    starts, ends, costs = _device_inputs(table, total_layers, cfg, tau,
+                                         planner)
+    if use_kernel:
+        from repro.kernels import ops
+        distK, pedge, prank = ops.tropical_route_kbest(
+            starts, ends, costs, total_layers=total_layers, k_best=k_best,
+            interpret=interpret)
+    else:
+        distK, pedge, prank = layered_dp_kbest(
+            starts, ends, costs, total_layers=total_layers, k_best=k_best)
+    hops = backtrack_kbest(starts, pedge, prank, total_layers=total_layers,
+                           k_max=k_max)
+    return np.asarray(hops), np.asarray(distK[:, total_layers, :])

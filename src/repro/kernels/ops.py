@@ -16,6 +16,8 @@ from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.rwkv6_chunk import wkv6_chunked as _wkv6_pallas
 from repro.kernels.ssd_chunk import ssd_chunked as _ssd_pallas
 from repro.kernels.tropical_route import tropical_route as _tropical_pallas
+from repro.kernels.tropical_route import \
+    tropical_route_kbest as _tropical_kbest_pallas
 
 
 def on_tpu() -> bool:
@@ -56,6 +58,21 @@ def tropical_route(starts, ends, costs, *, total_layers: int,
     # XLA fallback: the same DP in jnp (routing_jax.layered_dp)
     from repro.core.routing_jax import layered_dp
     return layered_dp(starts, ends, costs, total_layers=total_layers)
+
+
+def tropical_route_kbest(starts, ends, costs, *, total_layers: int,
+                         k_best: int, impl: str = "auto",
+                         interpret: bool = False, **kw):
+    impl = _resolve("pallas" if interpret else impl)
+    if impl == "pallas":
+        return _tropical_kbest_pallas(starts, ends, costs,
+                                      total_layers=total_layers,
+                                      k_best=k_best, interpret=interpret,
+                                      **kw)
+    # XLA fallback: the same K-best DP in jnp (routing_jax)
+    from repro.core.routing_jax import layered_dp_kbest
+    return layered_dp_kbest(starts, ends, costs, total_layers=total_layers,
+                            k_best=k_best)
 
 
 def wkv6(r, k, v, lw, u, state0, *, impl: str = "auto",

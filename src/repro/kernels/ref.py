@@ -79,6 +79,40 @@ def tropical_route_ref(starts, ends, costs, total_layers: int):
     return dist, pred
 
 
+def tropical_route_kbest_ref(starts, ends, costs, total_layers: int,
+                             k_best: int):
+    """K-best layered-DAG min-plus DP, numpy reference.
+
+    Per boundary the (P, K) extension candidates are reduced with a stable
+    sort by (value, peer index, rank) — the tie order shared by
+    ``routing_jax.layered_dp_kbest`` and the Pallas kernel. Returns
+    (distK (R, L+1, K), pedge (R, L+1, K), prank (R, L+1, K))."""
+    starts = np.asarray(starts)
+    ends = np.asarray(ends)
+    costs = np.asarray(costs, np.float32)
+    R, P = costs.shape
+    L, K = total_layers, k_best
+    INF = np.float32(3.0e38)
+    distK = np.full((R, L + 1, K), INF, np.float32)
+    pedge = np.full((R, L + 1, K), -1, np.int32)
+    prank = np.full((R, L + 1, K), -1, np.int32)
+    distK[:, 0, 0] = 0.0
+    sidx = np.clip(starts, 0, L)
+    for b in range(1, L + 1):
+        mask = ends == b
+        with np.errstate(over="ignore"):  # INF + INF -> inf is intended
+            cand = np.where(mask[None, :, None],
+                            distK[:, sidx, :] + costs[:, :, None], INF)
+        flat = cand.reshape(R, P * K)
+        sel = np.argsort(flat, axis=1, kind="stable")[:, :K]
+        vals = np.take_along_axis(flat, sel, axis=1)
+        ok = vals < INF
+        distK[:, b, :] = np.where(ok, vals, INF)
+        pedge[:, b, :] = np.where(ok, sel // K, -1)
+        prank[:, b, :] = np.where(ok, sel % K, -1)
+    return distK, pedge, prank
+
+
 # ---------------------------------------------------------------------------
 # WKV6 oracle (token-by-token recurrence)
 # ---------------------------------------------------------------------------

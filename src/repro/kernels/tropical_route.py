@@ -75,6 +75,9 @@ def tropical_route(starts, ends, costs, *, total_layers: int,
     """
     R, P = costs.shape
     L = total_layers
+    if R == 0:                  # degenerate batch: nothing to route
+        return (jnp.full((0, L + 1), INF, jnp.float32),
+                jnp.full((0, L + 1), -1, jnp.int32))
     blk_r = min(blk_r, R)
     r_pad = (-R) % blk_r
     if r_pad:
@@ -107,3 +110,117 @@ def tropical_route(starts, ends, costs, *, total_layers: int,
     if r_pad:
         dist, pred = dist[:R], pred[:R]
     return dist, pred
+
+
+# ---------------------------------------------------------------------------
+# K-best variant: top-K (dist, pred, rank) per boundary
+# ---------------------------------------------------------------------------
+
+
+def _route_kernel_kbest(starts_oh_ref, ends_ref, costs_ref, dist_ref,
+                        pedge_ref, prank_ref, *, total_layers: int,
+                        k_best: int):
+    """K-best min-plus DP, 2-D layout: the K alternates of each boundary
+    live in K adjacent columns (column b*K + k = boundary b, rank k), so
+    the boundary gather stays ONE MXU matmul against the Kronecker one-hot
+    ``S ⊗ I_K`` and the per-boundary top-K reduction is K rounds of
+    (min, argmin, mask) over the (blk_r, P*K) candidate block — the same
+    (value, peer, rank) tie order as the numpy planner DP's stable sort.
+    """
+    L, K = total_layers, k_best
+    S = starts_oh_ref[...]                     # ((L+1)*K, P*K) f32
+    ends = ends_ref[...]                       # (1, P*K) i32, K-replicated
+    costs = costs_ref[...]                     # (blk_r, P*K), K-replicated
+    blk_r, PK = costs.shape
+
+    dist0 = jnp.full((blk_r, (L + 1) * K), INF, jnp.float32)
+    dist0 = dist0.at[:, 0].set(0.0)            # boundary 0, rank 0
+    pedge0 = jnp.full((blk_r, (L + 1) * K), -1, jnp.int32)
+    prank0 = jnp.full((blk_r, (L + 1) * K), -1, jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, PK), 1)
+    outcol = jax.lax.broadcasted_iota(jnp.int32, (1, (L + 1) * K), 1)
+
+    def body(b, carry):
+        dist, pedge, prank = carry
+        d_start = jax.lax.dot_general(
+            jnp.minimum(dist, INF), S, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        cand = jnp.where(ends == b, d_start + costs, INF)   # (blk_r, PK)
+        for k in range(K):
+            m = jnp.min(cand, axis=1)
+            a = jnp.argmin(cand, axis=1).astype(jnp.int32)
+            ok = (m < INF)[:, None]
+            tgt = outcol == b * K + k
+            dist = jnp.where(tgt, jnp.where(ok, m[:, None], INF), dist)
+            pedge = jnp.where(tgt & ok, (a // K)[:, None], pedge)
+            prank = jnp.where(tgt & ok, (a % K)[:, None], prank)
+            cand = jnp.where(col == a[:, None], INF, cand)
+        return dist, pedge, prank
+
+    dist, pedge, prank = jax.lax.fori_loop(1, L + 1, body,
+                                           (dist0, pedge0, prank0))
+    dist_ref[...] = dist
+    pedge_ref[...] = pedge
+    prank_ref[...] = prank
+
+
+@functools.partial(jax.jit, static_argnames=("total_layers", "k_best",
+                                             "blk_r", "interpret"))
+def tropical_route_kbest(starts, ends, costs, *, total_layers: int,
+                         k_best: int, blk_r: int = 64,
+                         interpret: bool = False):
+    """K-best batched routing DP. starts/ends (P,) i32; costs (R, P) f32.
+
+    Returns (distK (R, L+1, K) f32, pedge (R, L+1, K) i32 peer index or
+    -1, prank (R, L+1, K) i32 predecessor rank or -1) — exactly what
+    ``core.routing_jax.backtrack_kbest`` consumes, and bit-for-bit the
+    output of ``core.routing_jax.layered_dp_kbest``. Empty batches
+    (R == 0) return empty outputs instead of dividing by zero in the
+    grid computation.
+    """
+    R, P = costs.shape
+    L, K = total_layers, k_best
+    if R == 0:                  # degenerate batch: nothing to route
+        return (jnp.full((0, L + 1, K), INF, jnp.float32),
+                jnp.full((0, L + 1, K), -1, jnp.int32),
+                jnp.full((0, L + 1, K), -1, jnp.int32))
+    blk_r = min(blk_r, R)
+    r_pad = (-R) % blk_r
+    if r_pad:
+        costs = jnp.concatenate(
+            [costs, jnp.full((r_pad, P), INF, costs.dtype)], axis=0)
+    r_total = R + r_pad
+    # Kronecker one-hot (S ⊗ I_K): row j*K+k routes dist[j, rank k] to
+    # every peer column p*K+k with start_p == j, built once outside
+    starts_oh = jax.nn.one_hot(starts, L + 1, dtype=jnp.float32).T
+    starts_oh = jnp.kron(starts_oh, jnp.eye(K, dtype=jnp.float32))
+    ends_rep = jnp.repeat(ends.astype(jnp.int32), K)[None, :]
+    costs_rep = jnp.repeat(costs, K, axis=1)
+    kernel = functools.partial(_route_kernel_kbest, total_layers=L,
+                               k_best=K)
+    dist, pedge, prank = pl.pallas_call(
+        kernel,
+        grid=(r_total // blk_r,),
+        in_specs=[
+            pl.BlockSpec(((L + 1) * K, P * K), lambda i: (0, 0)),
+            pl.BlockSpec((1, P * K), lambda i: (0, 0)),
+            pl.BlockSpec((blk_r, P * K), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_r, (L + 1) * K), lambda i: (i, 0)),
+            pl.BlockSpec((blk_r, (L + 1) * K), lambda i: (i, 0)),
+            pl.BlockSpec((blk_r, (L + 1) * K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r_total, (L + 1) * K), jnp.float32),
+            jax.ShapeDtypeStruct((r_total, (L + 1) * K), jnp.int32),
+            jax.ShapeDtypeStruct((r_total, (L + 1) * K), jnp.int32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(starts_oh, ends_rep, costs_rep)
+    if r_pad:
+        dist, pedge, prank = dist[:R], pedge[:R], prank[:R]
+    return (dist.reshape(R, L + 1, K), pedge.reshape(R, L + 1, K),
+            prank.reshape(R, L + 1, K))

@@ -28,7 +28,14 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--layers-per-stage", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--windowed", action="store_true",
+                    help="gtrac mode: serve all requests concurrently via "
+                         "the window-batched router (one batched DP per "
+                         "token window) instead of per-token routing")
     args = ap.parse_args(argv)
+    if args.windowed and args.algorithm != "gtrac":
+        ap.error("--windowed routes via the gtrac batch router; "
+                 "--algorithm %s is only available per-token" % args.algorithm)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -51,6 +58,23 @@ def main(argv=None):
     srv = GTRACPipelineServer(cfg, params,
                               layers_per_stage=args.layers_per_stage,
                               algorithm=args.algorithm, seed=args.seed)
+    if args.windowed:
+        for _ in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size, size=8)
+            srv.submit(prompt, max_new_tokens=args.tokens)
+        done = srv.run_queue()
+        ok = 0
+        for r in done:
+            met = r.metrics
+            ok += met.tokens == args.tokens
+            print(f"req {r.request_id}: {met.tokens}/{args.tokens} tokens, "
+                  f"{met.repairs} repairs, {met.failures} failures "
+                  f"-> {r.output}")
+        s = srv.router.stats
+        print(f"SSR: {ok}/{args.requests}  windows: {s.windows}  "
+              f"batched DP calls: {s.device_calls} "
+              f"(vs {s.requests} per-token solves)")
+        return
     ok = 0
     for rid in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size, size=8)

@@ -1,6 +1,7 @@
 """Batched serving engine: prefill + decode with greedy/temperature
-sampling, EOS detection, and a simple admission queue (static batching;
-the trust-routed pipeline server in gtrac_serve.py layers G-TRAC on top).
+sampling, EOS detection, and a window admission queue (static batching;
+the trust-routed pipeline server in gtrac_serve.py layers G-TRAC on top
+and shares ``AdmissionQueue`` for its window-batched routing loop).
 """
 from __future__ import annotations
 
@@ -23,10 +24,55 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = field(default_factory=list)
     done: bool = False
+    # per-request trust floor for trust-routed serving (gtrac_serve.py);
+    # None -> the router's configured floor. Plain engines ignore it.
+    tau: Optional[float] = None
+
+
+class AdmissionQueue:
+    """FIFO admission with window batching.
+
+    Pending requests are admitted in windows of at most ``max_batch``:
+    the plain engine drains whole windows into its static batcher, the
+    trust-routed pipeline server tops its active stream set up to the
+    window size each token step (continuous batching). Factored out of
+    ``ServingEngine`` so both serving layers share one admission policy.
+    """
+
+    def __init__(self, max_batch: int = 64):
+        self.max_batch = int(max_batch)
+        self.pending: List[Request] = []
+        self.admitted = 0
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def submit(self, req: Request) -> Request:
+        self.pending.append(req)
+        return req
+
+    def next_window(self, capacity: Optional[int] = None) -> List[Request]:
+        """Pop the next admission window (up to min(max_batch, capacity))."""
+        n = self.max_batch if capacity is None \
+            else max(0, min(self.max_batch, capacity))
+        window, self.pending = self.pending[:n], self.pending[n:]
+        self.admitted += len(window)
+        return window
+
+    @staticmethod
+    def by_prompt_length(reqs: List[Request]) -> Dict[int, List[Request]]:
+        """Group a window by prompt length (padding a causal prompt shifts
+        RoPE positions and leaks attention onto pad tokens; bucketing is
+        the standard fix)."""
+        groups: Dict[int, List[Request]] = {}
+        for r in reqs:
+            groups.setdefault(len(r.prompt), []).append(r)
+        return groups
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, capacity_margin: int = 64):
+    def __init__(self, cfg: ModelConfig, params, capacity_margin: int = 64,
+                 max_batch: int = 64):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -36,28 +82,32 @@ class ServingEngine:
                                                     capacity=cap),
             static_argnames=("cap",))
         self._decode = jax.jit(self.model.decode_step)
-        self.queue: List[Request] = []
+        self.admission = AdmissionQueue(max_batch=max_batch)
+
+    @property
+    def queue(self) -> List[Request]:
+        return self.admission.pending
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(len(self.queue), np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id)
-        self.queue.append(req)
-        return req
+        req = Request(len(self.queue) + self.admission.admitted,
+                      np.asarray(prompt, np.int32), max_new_tokens, eos_id)
+        return self.admission.submit(req)
 
     def run_batch(self, reqs: Optional[List[Request]] = None,
                   greedy: bool = True, temperature: float = 1.0,
                   seed: int = 0) -> List[Request]:
-        """Serve requests to completion. Requests are grouped by prompt
-        length (padding a causal prompt shifts RoPE positions and leaks
-        attention onto pad tokens; length-bucketing is the standard fix)."""
-        reqs = reqs if reqs is not None else self.queue
+        """Serve requests to completion, admitted in queue windows and
+        grouped by prompt length (``AdmissionQueue.by_prompt_length``)."""
+        if reqs is None:
+            served: List[Request] = []
+            while len(self.admission):
+                served += self.run_batch(self.admission.next_window(),
+                                         greedy, temperature, seed)
+            return served
         if not reqs:
             return []
-        by_len: Dict[int, List[Request]] = {}
-        for r in reqs:
-            by_len.setdefault(len(r.prompt), []).append(r)
-        for group in by_len.values():
+        for group in AdmissionQueue.by_prompt_length(reqs).values():
             self._run_equal_batch(group, greedy, temperature, seed)
         return reqs
 

@@ -31,6 +31,8 @@ from repro.distributed.pipeline import StagePartition
 from repro.models.common import apply_norm, embed_tokens, logits_head
 from repro.models.rope import positional_angles
 from repro.models.transformer import block_forward
+from repro.serving.batch_router import BatchRouter
+from repro.serving.engine import AdmissionQueue, Request
 from repro.sim.peers import PROFILES, SimPeer, make_peer
 from repro.sim.testbed import Testbed
 
@@ -87,6 +89,15 @@ class ServeMetrics:
     infeasible: int = 0
 
 
+@dataclass
+class RoutedRequest(Request):
+    """Engine admission request + per-stream routed serving state."""
+
+    metrics: ServeMetrics = field(default_factory=ServeMetrics)
+    tokens: Optional[jnp.ndarray] = None    # (1, S) running token tensor
+    executor: Optional[ChainExecutor] = None
+
+
 class GTRACPipelineServer:
     """Serve a model across simulated stage-replica peers under a routing
     policy. Peers execute REAL stage compute; failures/latency are injected
@@ -126,6 +137,12 @@ class GTRACPipelineServer:
         self.planner = RoutePlanner(cfg.num_layers,
                                     k_best=self.gcfg.k_best_routes,
                                     cache_size=self.gcfg.planner_cache_size)
+        # window-batched routing: concurrent streams submitted per token
+        # window are solved in ONE batched device DP (serving/batch_router)
+        self.router = BatchRouter(planner=self.planner, cfg=self.gcfg,
+                                  total_layers=cfg.num_layers)
+        self.admission = AdmissionQueue(max_batch=self.gcfg.router_max_batch)
+        self._next_rid = 10_000   # submit() ids; clear of generate()'s
         self._stage_of = {}  # layer_start -> stage idx
         for i in range(self.partition.n_stages):
             self._stage_of[self.partition.segment(i)[0]] = i
@@ -192,3 +209,81 @@ class GTRACPipelineServer:
         self.bed.peers and [p.forget_request(request_id)
                             for p in self.bed.peers.values()]
         return np.asarray(tokens[0, len(prompt):]), metrics
+
+    # -- window-batched serving (the batch router path) ------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               tau: Optional[float] = None,
+               request_id: Optional[int] = None) -> RoutedRequest:
+        """Queue a decode stream for window-batched serving.
+
+        ``tau`` is this request's trust floor (row of the batched DP's
+        tau vector); None uses the configured floor."""
+        if request_id is None:
+            request_id = self._next_rid
+            self._next_rid += 1
+        req = RoutedRequest(request_id=request_id,
+                            prompt=np.asarray(prompt, np.int32),
+                            max_new_tokens=max_new_tokens, tau=tau)
+        req.tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        req.executor = ChainExecutor(self.gcfg, self._hop_fn(request_id))
+        return self.admission.submit(req)
+
+    def run_queue(self) -> List[RoutedRequest]:
+        """Serve every queued stream to completion, one token per stream
+        per window. Each window: one registry sweep (vectorized TTL /
+        trust decay), one seeker sync check, ONE batched device DP for
+        all active streams' routes, then chain execution per stream.
+        Streams run concurrently, so the sim clock advances by the
+        window's max chain latency, and newly queued requests are
+        admitted as capacity frees up (continuous batching)."""
+        served: List[RoutedRequest] = []
+        active: List[RoutedRequest] = []
+        while active or len(self.admission):
+            admitted = self.admission.next_window(
+                capacity=self.admission.max_batch - len(active))
+            active += admitted
+            served += admitted
+            self.bed.anchor.sweep(self.bed.now)
+            self.seeker.maybe_sync(self.bed.now)
+            table = self.seeker.view()
+            for req in active:
+                self.router.submit(req.request_id, req.tau)
+            plans = self.router.route_window(table)   # ONE batched DP
+            window_ms = 0.0
+            for req in active:
+                plan = plans[req.request_id]
+                if not plan.feasible:
+                    req.metrics.infeasible += 1
+                    req.done = True
+                    continue
+                report, payload = req.executor.execute(
+                    plan.chain_ids(0), table, payload=(req.tokens, None),
+                    plan=plan)
+                for rep in split_reports(report):
+                    self.bed.anchor.apply_report(rep)
+                req.metrics.repairs += int(report.repaired)
+                req.metrics.rerouted += int(report.repaired)
+                window_ms = max(window_ms, report.total_latency_ms)
+                if not report.success:
+                    req.metrics.failures += 1
+                    req.done = True
+                    continue
+                _, logits = payload
+                nxt = jnp.argmax(logits[:, -1, :], -1)
+                req.tokens = jnp.concatenate(
+                    [req.tokens, nxt[:, None].astype(jnp.int32)], axis=1)
+                tok = int(nxt[0])
+                req.output.append(tok)
+                req.metrics.tokens += 1
+                req.metrics.token_latency_ms.append(report.total_latency_ms)
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.output) >= req.max_new_tokens:
+                    req.done = True
+            self.bed.advance(window_ms / 1e3)   # streams run concurrently
+            for req in active:
+                if req.done:
+                    for p in self.bed.peers.values():
+                        p.forget_request(req.request_id)
+            active = [r for r in active if not r.done]
+        return served

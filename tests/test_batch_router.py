@@ -1,0 +1,317 @@
+"""Window-batched serving router (serving/batch_router.py), the registry
+sweep fast path, and the shared admission queue: one device DP per window,
+per-request trust floors, correctness vs monolithic decoding, and O(columns)
+TTL / trust-decay sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import GTRACConfig
+from repro.core.planner import RoutePlanner
+from repro.models.api import build_model
+from repro.serving.batch_router import BatchRouter
+from repro.serving.engine import AdmissionQueue, Request, ServingEngine
+from repro.serving.gtrac_serve import GTRACPipelineServer
+
+from conftest import build_layered_anchor
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("gpt2-large").reduced(num_layers=4, vocab_size=128,
+                                           remat=False)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def monolithic_greedy(cfg, model, params, prompt, n):
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    out = []
+    for _ in range(n):
+        logits, _ = model.prefill(params, tokens=toks)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks = jnp.concatenate([toks, jnp.full((1, 1), nxt, jnp.int32)], 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BatchRouter unit behavior
+# ---------------------------------------------------------------------------
+
+
+class TestBatchRouter:
+    def _router(self, gcfg, L=12, **anchor_kw):
+        anchor = build_layered_anchor(gcfg, L=L, **anchor_kw)
+        planner = RoutePlanner(L, k_best=gcfg.k_best_routes)
+        return anchor, BatchRouter(planner=planner, cfg=gcfg,
+                                   total_layers=L)
+
+    def test_one_device_call_per_window(self, gcfg):
+        anchor, router = self._router(gcfg)
+        t = anchor.snapshot(0.0)
+        for rid in range(8):
+            router.submit(rid, tau=0.1 * rid)
+        plans = router.route_window(t)
+        assert len(plans) == 8
+        assert router.stats.device_calls == 1
+        assert router.stats.requests == 8
+        assert router.pending == 0           # drained
+
+    def test_per_request_floors_respected(self, gcfg):
+        """Each request's plan honors ITS row of the tau vector."""
+        anchor, router = self._router(gcfg, replicas=5, seed=1)
+        t = anchor.snapshot(0.0)
+        router.submit(0, tau=0.0)
+        router.submit(1, tau=0.9)
+        plans = router.route_window(t)
+        for rid, floor in ((0, 0.0), (1, 0.9)):
+            plan = plans[rid]
+            if plan.feasible:
+                for pid in plan.chain_ids(0):
+                    assert t.trust[t.index_of(pid)] >= floor
+
+    def test_identical_floors_share_plan_object(self, gcfg):
+        """tau dedupe: requests with the same floor get the same RoutePlan
+        (one DP row), different floors get their own."""
+        anchor, router = self._router(gcfg)
+        t = anchor.snapshot(0.0)
+        router.submit(0, tau=0.8)
+        router.submit(1, tau=0.8)
+        router.submit(2, tau=0.5)
+        plans = router.route_window(t)
+        assert plans[0] is plans[1]
+        assert plans[0] is not plans[2]
+        assert router.stats.unique_floors == 2
+
+    def test_plans_match_per_request_planner(self, gcfg):
+        """Window plans equal what plan_route would have produced request
+        by request (same snapshot, same floor)."""
+        from repro.core.planner import plan_route
+        anchor, router = self._router(gcfg, replicas=4, seed=3)
+        t = anchor.snapshot(0.0)
+        t.latency_ms[:] = np.round(t.latency_ms)
+        floors = [0.0, 0.6, 0.8]
+        for rid, tau in enumerate(floors):
+            router.submit(rid, tau=tau)
+        plans = router.route_window(t)
+        ref_planner = RoutePlanner(12, k_best=gcfg.k_best_routes)
+        for rid, tau in enumerate(floors):
+            _, ref = plan_route(t, 12, gcfg, tau=tau, planner=ref_planner)
+            assert plans[rid].chain_rows == ref.chain_rows
+
+    def test_unchanged_window_reuses_plans(self, gcfg):
+        """Identical snapshot object + identical floor set: the next
+        window is served from the previous solve (zero DP calls)."""
+        anchor, router = self._router(gcfg)
+        t = anchor.snapshot(0.0)
+        router.submit(0, tau=0.8)
+        p1 = router.route_window(t)
+        router.submit(1, tau=0.8)
+        p2 = router.route_window(t)
+        assert p2[1] is p1[0]
+        assert router.stats.device_calls == 1
+        assert router.stats.window_cache_hits == 1
+        # any registry mutation -> new table object -> fresh solve
+        anchor.set_trust(next(iter(anchor.peers)), 0.3)
+        router.submit(2, tau=0.8)
+        router.route_window(anchor.snapshot(0.0))
+        assert router.stats.device_calls == 2
+
+    def test_unknown_backend_rejected(self, gcfg):
+        anchor, router = self._router(gcfg)
+        router.backend = "cpu"
+        router.submit(0)
+        with pytest.raises(ValueError):
+            router.route_window(anchor.snapshot(0.0))
+
+    def test_empty_window_is_free(self, gcfg):
+        anchor, router = self._router(gcfg)
+        assert router.route_window(anchor.snapshot(0.0)) == {}
+        assert router.stats.device_calls == 0
+
+    def test_device_state_cached_across_windows(self, gcfg):
+        """Unchanged registry: the compiled snapshot's device arrays are
+        reused — the second window performs no fresh host->device state
+        conversion (cache hit on the CompiledGraph)."""
+        anchor, router = self._router(gcfg)
+        router.backend = "jnp"           # force the device DP path
+        t = anchor.snapshot(0.0)
+        router.submit(0)
+        router.route_window(t)
+        g = router.planner.compile(t)
+        state1 = g.device_state(t)
+        router.submit(1)
+        router.route_window(t)
+        assert g.device_state(t) is state1   # same cached tuple
+        # a trust mutation bumps the version -> fresh arrays
+        anchor.set_trust(next(iter(anchor.peers)), 0.42)
+        t2 = anchor.snapshot(0.0)
+        assert router.planner.compile(t2).device_state(t2) is not state1
+
+
+# ---------------------------------------------------------------------------
+# Window-batched pipeline serving end to end
+# ---------------------------------------------------------------------------
+
+
+class TestWindowedServer:
+    def test_run_queue_matches_monolithic(self, tiny):
+        """Golden-only peer pool: every concurrently-served stream must
+        reproduce monolithic greedy decoding exactly."""
+        cfg, model, params = tiny
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, seed=0)
+        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=5)
+                for _ in range(3)]
+        done = srv.run_queue()
+        want = monolithic_greedy(cfg, model, params, np.arange(1, 9), 5)
+        assert len(done) == 3
+        for r in done:
+            assert r.output == want
+            assert r.metrics.tokens == 5 and r.metrics.failures == 0
+        # at most ONE batched DP per window (zero when the seeker's view
+        # and floor set are unchanged between gossip syncs), never one
+        # per stream per token
+        s = srv.router.stats
+        assert s.device_calls + s.window_cache_hits == s.windows
+        assert 1 <= s.device_calls <= s.windows
+        assert s.requests == sum(r.metrics.tokens for r in done)
+
+    def test_run_queue_survives_failures(self, tiny):
+        cfg, model, params = tiny
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"honeypot": 2, "golden": 2},
+                                  seed=1)
+        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=4)
+                for _ in range(6)]
+        done = srv.run_queue()
+        ok = sum(r.metrics.tokens == 4 for r in done)
+        assert ok >= 4       # trust learning + plan splicing keep serving
+
+    def test_continuous_admission(self, tiny):
+        """More streams than router_max_batch: later requests are admitted
+        as earlier ones complete, and all finish."""
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(router_max_batch=2)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, gcfg=gcfg, seed=0)
+        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=3)
+                for _ in range(5)]
+        done = srv.run_queue()
+        assert len(done) == 5
+        assert all(r.metrics.tokens == 3 for r in done)
+
+    def test_window_sweep_expires_dead_peers(self, tiny):
+        """With ttl_expire_factor set, crashed peers vanish from the
+        registry (not just liveness-masked) after enough windows."""
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(ttl_expire_factor=1.0)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 3}, gcfg=gcfg, seed=2)
+        n0 = len(srv.bed.anchor.peers)
+        crashed = [pid for pid in list(srv.bed.peers)[:2]]
+        srv.bed.crash_peers(crashed)
+        # long windows: chain latencies advance the clock past the TTL
+        for _ in range(60):
+            srv.submit(np.arange(1, 9), max_new_tokens=1)
+            srv.run_queue()
+        assert len(srv.bed.anchor.peers) <= n0 - len(crashed)
+
+
+# ---------------------------------------------------------------------------
+# Shared admission queue (serving/engine.py)
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionQueue:
+    def test_fifo_windows(self):
+        q = AdmissionQueue(max_batch=3)
+        reqs = [q.submit(Request(i, np.arange(4))) for i in range(7)]
+        w1 = q.next_window()
+        assert [r.request_id for r in w1] == [0, 1, 2]
+        w2 = q.next_window(capacity=1)
+        assert [r.request_id for r in w2] == [3]
+        assert len(q) == 3 and q.admitted == 4
+
+    def test_by_prompt_length_grouping(self):
+        reqs = [Request(0, np.arange(4)), Request(1, np.arange(8)),
+                Request(2, np.arange(4))]
+        groups = AdmissionQueue.by_prompt_length(reqs)
+        assert sorted(groups) == [4, 8]
+        assert [r.request_id for r in groups[4]] == [0, 2]
+
+    def test_engine_drains_admission_windows(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(cfg, params, max_batch=2)
+        reqs = [eng.submit(np.arange(1, 9), max_new_tokens=2)
+                for _ in range(3)]
+        done = eng.run_batch()
+        assert len(done) == 3 and len(eng.admission) == 0
+        assert all(len(r.output) == 2 for r in reqs)
+        want = monolithic_greedy(cfg, model, params, np.arange(1, 9), 2)
+        assert reqs[0].output == want
+
+
+# ---------------------------------------------------------------------------
+# Registry sweep (vectorized TTL expiry + trust decay)
+# ---------------------------------------------------------------------------
+
+
+class TestRegistrySweep:
+    def test_noop_sweep_keeps_versions(self, gcfg):
+        a = build_layered_anchor(gcfg)
+        t = a.snapshot(0.0)
+        v, tv = a.version, a.topo_version
+        assert a.sweep(5.0) == 0
+        assert (a.version, a.topo_version) == (v, tv)
+        assert a.snapshot(5.0) is t          # snapshot cache untouched
+
+    def test_bulk_expiry(self, gcfg):
+        a = build_layered_anchor(gcfg)
+        n = len(a.peers)
+        keep = list(a.peers)[:3]
+        for pid in keep:
+            a.heartbeat(pid, 100.0)
+        tv = a.topo_version
+        expired = a.sweep(100.0, expire_after_s=gcfg.node_ttl_s)
+        assert expired == n - 3
+        assert a.topo_version > tv           # membership changed
+        t = a.snapshot(100.0)
+        assert sorted(int(p) for p in t.peer_ids) == sorted(keep)
+        # records rematerialize lazily and stay consistent
+        assert set(a.peers) == set(keep)
+
+    def test_trust_decay_toward_init(self, gcfg):
+        a = build_layered_anchor(gcfg, trust_range=(0.5, 0.9))
+        before = a.snapshot(0.0).trust.copy()
+        a.sweep(10.0, decay_rate=0.05)
+        after = a.snapshot(10.0).trust
+        assert np.all(after > before)        # decaying up toward init=1.0
+        assert np.all(after <= gcfg.max_trust)
+
+    def test_sweep_then_heartbeat_roundtrip(self, gcfg):
+        """Heartbeats after a sweep must hit the swept mirror (lazy
+        record materialization keeps the control plane consistent)."""
+        a = build_layered_anchor(gcfg)
+        pid = next(iter(a.peers))
+        a.sweep(1.0, decay_rate=0.01)
+        a.heartbeat(pid, 2.0)
+        assert a.peers[pid].last_heartbeat == 2.0
+        t = a.snapshot(2.0)
+        assert bool(t.alive[t.index_of(pid)])
+
+    def test_planner_recompiles_after_expiry(self, gcfg):
+        """Expiry bumps topo_version: the planner must rebuild its CSR
+        graph rather than serve a stale topology."""
+        a = build_layered_anchor(gcfg)
+        planner = RoutePlanner(12)
+        g1 = planner.compile(a.snapshot(0.0))
+        a.sweep(100.0, expire_after_s=gcfg.node_ttl_s)   # everyone dead
+        g2 = planner.compile(a.snapshot(100.0))
+        assert g2 is not g1 and g2.n_peers == 0
