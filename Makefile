@@ -1,15 +1,27 @@
 # Verify loop for the G-TRAC reproduction. Targets:
-#   make test          tier-1 suite (the ROADMAP command)
-#   make bench-routing routing scaling bench -> BENCH_routing.json
-#   make bench-serving window-batched router bench -> BENCH_serving.json
-#                      (FAILS unless batched >= 3x per-token loop at R=64)
-#   make lint          compile-check + pyflakes (if installed)
+#   make test           tier-1 suite (the ROADMAP command)
+#   make bench-routing  routing scaling bench -> BENCH_routing.json
+#   make bench-serving  window-batched router bench -> BENCH_serving.json
+#                       (FAILS unless batched >= 3x per-token loop at R=64)
+#   make bench-sharding sharded vs monolithic anchor -> BENCH_sharding.json
+#                       (FAILS unless composed-snapshot no-change path
+#                        <= 2x monolithic at S=16; parity always asserted)
+#   make bench-smoke    CI smoke lane: all three benches in --quick mode
+#                       (tiny N/R, perf gates skipped; writes
+#                        BENCH_*.quick.json, never the tracked JSONs)
+#   make lint           compile-check + ruff (pyflakes fallback). HARD
+#                       dependency: fails if neither linter is installed —
+#                       pip install -r requirements-dev.txt
+#
+# CI (.github/workflows/ci.yml) runs `make lint`, the tier-1 suite on
+# Python 3.10 + 3.11, and `make bench-smoke` with BENCH_*.json uploaded
+# as workflow artifacts.
 
 PY        ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench-routing bench-serving lint
+.PHONY: test bench-routing bench-serving bench-sharding bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,7 +32,22 @@ bench-routing:
 bench-serving:
 	$(PY) -m benchmarks.bench_serving
 
+bench-sharding:
+	$(PY) -m benchmarks.bench_sharding
+
+bench-smoke:
+	$(PY) -m benchmarks.bench_scaling --quick
+	$(PY) -m benchmarks.bench_serving --quick
+	$(PY) -m benchmarks.bench_sharding --quick
+
 lint:
 	$(PY) -m compileall -q src benchmarks tests examples
-	-$(PY) -m pyflakes src benchmarks tests examples 2>/dev/null || \
-	    echo "pyflakes not installed; compile-check only"
+	@if $(PY) -c "import ruff" >/dev/null 2>&1; then \
+	    $(PY) -m ruff check src benchmarks tests examples; \
+	elif $(PY) -c "import pyflakes" >/dev/null 2>&1; then \
+	    $(PY) -m pyflakes src benchmarks tests examples; \
+	else \
+	    echo "lint: no linter installed (ruff or pyflakes required);" \
+	         "run: pip install -r requirements-dev.txt"; \
+	    exit 1; \
+	fi

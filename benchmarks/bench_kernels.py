@@ -9,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels import ref
-from repro.kernels.ops import decode_attention, flash_attention, wkv6
+from repro.kernels.ops import flash_attention
 from repro.core.routing_jax import layered_dp
 
 KEY = jax.random.PRNGKey(0)

@@ -18,6 +18,7 @@ faster than the heap path at N=1000, same machine, same run).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -40,11 +41,15 @@ def _per_call_us(fn, reps: int) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(trials: int = 100, seed: int = 0):
+def run(trials: int = 100, seed: int = 0, quick: bool = False):
+    """``quick`` is the CI smoke lane: tiny N, few trials, and the
+    N=1000 claims / batched-router sections are skipped — it exists to
+    catch bitrot on every push, not to produce perf numbers."""
     cfg = GTRACConfig()
     rng = np.random.default_rng(seed)
+    sizes = [50] if quick else SIZES
     speedups = {}
-    for n in SIZES:
+    for n in sizes:
         bed = build_scaling_testbed(n, cfg=cfg, seed=seed)
         t = bed.anchor.snapshot(0.0)
         planner = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes)
@@ -110,36 +115,54 @@ def run(trials: int = 100, seed: int = 0):
             us = _per_call_us(fn, reps)
             emit(f"scaling/{name}/N{n}", us, f"{us/1e3:.3f}ms")
 
-    # paper claims at N=1000
-    bed = build_scaling_testbed(1000, cfg=cfg, seed=seed)
-    t = bed.anchor.snapshot(0.0)
-    planner = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes)
-    g_ms = _per_call_us(
-        lambda: gtrac_route(t, bed.total_layers, cfg, tau=0.8,
-                            planner=planner), trials) / 1e3
-    emit("scaling/claims", g_ms * 1e3,
-         f"gtrac_below_10ms_at_N1000:{g_ms < 10.0}"
-         f"_warm_{speedups[1000]:.2f}x_vs_seed_heap"
-         f"(>=3x:{speedups[1000] >= 3.0})")
+    if not quick:
+        # paper claims at N=1000
+        bed = build_scaling_testbed(1000, cfg=cfg, seed=seed)
+        t = bed.anchor.snapshot(0.0)
+        planner = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes)
+        g_ms = _per_call_us(
+            lambda: gtrac_route(t, bed.total_layers, cfg, tau=0.8,
+                                planner=planner), trials) / 1e3
+        emit("scaling/claims", g_ms * 1e3,
+             f"gtrac_below_10ms_at_N1000:{g_ms < 10.0}"
+             f"_warm_{speedups[1000]:.2f}x_vs_seed_heap"
+             f"(>=3x:{speedups[1000] >= 3.0})")
 
-    # beyond-paper: batched device router (R requests in one call), routed
-    # through the same compiled snapshot as the numpy planner path
-    for R in (64, 512):
-        taus = np.full(R, 0.8)
-        route_batched(t, bed.total_layers, cfg, taus, k_max=12,
-                      planner=planner)  # compile
-        us = _per_call_us(
-            lambda: route_batched(t, bed.total_layers, cfg, taus, k_max=12,
-                                  planner=planner), 10)
-        emit(f"scaling/batched/R{R}/N1000", us,
-             f"{us/R:.1f}us_per_request")
+        # beyond-paper: batched device router (R requests in one call),
+        # routed through the same compiled snapshot as the numpy planner
+        for R in (64, 512):
+            taus = np.full(R, 0.8)
+            route_batched(t, bed.total_layers, cfg, taus, k_max=12,
+                          planner=planner)  # compile
+            us = _per_call_us(
+                lambda: route_batched(t, bed.total_layers, cfg, taus,
+                                      k_max=12, planner=planner), 10)
+            emit(f"scaling/batched/R{R}/N1000", us,
+                 f"{us/R:.1f}us_per_request")
 
-    # speedups live outside the rows: us_per_call stays a single unit (µs)
-    write_json("BENCH_routing.json", prefix="scaling/",
+    # speedups live outside the rows: us_per_call stays a single unit (µs);
+    # quick mode writes a separate file so the tracked real-hardware
+    # numbers are never clobbered by smoke runs
+    write_json("BENCH_routing.quick.json" if quick else "BENCH_routing.json",
+               prefix="scaling/",
                extra={"bench": "bench_scaling", "trials": trials,
+                      "quick": quick,
                       "speedup_vs_heap": {str(n): round(s, 3)
                                           for n, s in speedups.items()}})
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: N=50 only, few trials, no claims "
+                         "section (perf numbers not meaningful)")
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    trials = args.trials if args.trials is not None else \
+        (5 if args.quick else 100)
+    run(trials=trials, seed=args.seed, quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

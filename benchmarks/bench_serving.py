@@ -14,6 +14,7 @@ unchanged registry (exit 1 otherwise) — the PR's acceptance criterion.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -37,7 +38,8 @@ def _per_call_us(fn, reps: int) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def bench_routing_overhead(cfg: GTRACConfig, trials: int, seed: int):
+def bench_routing_overhead(cfg: GTRACConfig, trials: int, seed: int,
+                           sizes=SIZES):
     bed = build_paper_testbed(cfg=cfg, seed=seed)
     t = bed.anchor.snapshot(0.0)
     L = bed.total_layers
@@ -45,7 +47,7 @@ def bench_routing_overhead(cfg: GTRACConfig, trials: int, seed: int):
     planner.compile(t)          # warm: both paths route the same snapshot
     rng = np.random.default_rng(seed)
     speedups = {}
-    for R in SIZES:
+    for R in sizes:
         # distinct per-request floors: the per-token loop cannot collapse
         # them into one cached plan, exactly like per-request floors in
         # production (plan cache is version×tau keyed)
@@ -133,26 +135,51 @@ def bench_end_to_end(seed: int = 0):
     return {"per_token": round(tps_loop, 2), "windowed": round(tps_win, 2)}
 
 
-def run(trials: int = 50, seed: int = 0):
+def run(trials: int = 50, seed: int = 0, quick: bool = False):
+    """``quick`` is the CI smoke lane: R=8 only, no end-to-end model pass,
+    and the >=3x perf gate is reported but NOT enforced (GitHub runners
+    are too noisy to gate on; the gate runs on real hardware via
+    ``make bench-serving``)."""
     cfg = GTRACConfig()
-    speedups = bench_routing_overhead(cfg, trials, seed)
-    e2e = bench_end_to_end(seed)
-    gate_ok = speedups[GATE_R] >= GATE_X
+    sizes = (8,) if quick else SIZES
+    speedups = bench_routing_overhead(cfg, trials, seed, sizes=sizes)
+    e2e = None if quick else bench_end_to_end(seed)
+    gate_r = sizes[-1] if quick else GATE_R
+    gate_ok = speedups[gate_r] >= GATE_X
     emit("serving/gate", 0.0,
-         f"batched_vs_loop_at_R{GATE_R}:{speedups[GATE_R]:.2f}x"
-         f"(>= {GATE_X}x:{gate_ok})")
-    write_json("BENCH_serving.json", prefix="serving/",
-               extra={"bench": "bench_serving", "trials": trials,
-                      "speedup_loop_vs_batched": {
-                          str(r): round(s, 3) for r, s in speedups.items()},
-                      "tokens_per_s": e2e,
-                      "gate_R64_3x": bool(gate_ok)})
-    if not gate_ok:
+         f"batched_vs_loop_at_R{gate_r}:{speedups[gate_r]:.2f}x"
+         f"(>= {GATE_X}x:{gate_ok}{'_UNENFORCED' if quick else ''})")
+    extra = {"bench": "bench_serving", "trials": trials, "quick": quick,
+             "speedup_loop_vs_batched": {
+                 str(r): round(s, 3) for r, s in speedups.items()},
+             "gate_r": gate_r, "gate_enforced": not quick}
+    if not quick:
+        # only the real measurement may claim the R=64 gate key
+        extra["gate_R64_3x"] = bool(gate_ok)
+    if e2e is not None:
+        extra["tokens_per_s"] = e2e
+    # quick smoke runs must not clobber the tracked gated measurement
+    write_json("BENCH_serving.quick.json" if quick else "BENCH_serving.json",
+               prefix="serving/", extra=extra)
+    if not gate_ok and not quick:
         print(f"GATE FAILED: window-batched routing only "
-              f"{speedups[GATE_R]:.2f}x vs per-token loop at R={GATE_R} "
+              f"{speedups[gate_r]:.2f}x vs per-token loop at R={gate_r} "
               f"(need >= {GATE_X}x)", file=sys.stderr)
         sys.exit(1)
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny R, no e2e model pass, perf gate "
+                         "reported but not enforced")
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    trials = args.trials if args.trials is not None else \
+        (5 if args.quick else 50)
+    run(trials=trials, seed=args.seed, quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,196 @@
+"""Sharded anchor registry vs monolithic: control-plane fan-in throughput
+and composed-snapshot latency at S ∈ {1, 4, 16}.
+
+What the sharded design buys (and what it must not cost):
+
+* **Fan-in** — heartbeats, execution reports, and sweeps route to one
+  shard each (or fan out per shard for sweeps), so per-op cost should
+  stay flat as S grows: the shards are independent and each op touches
+  one of them.
+* **Composed snapshots** — the per-shard version vector makes the
+  no-change path S identity compares; the PR's acceptance gate is that
+  this fast path stays within 2x of the monolithic zero-copy snapshot at
+  S=16 (both are "nothing changed" reads — sharding must not tax the
+  common case). Dirty paths rebuild only the changed shards' columns.
+
+Emits BENCH_sharding.json via benchmarks/common. Run with --quick for the
+CI smoke lane (tiny N, perf gate skipped). The bit-identical-plans parity
+is asserted inline on every run — a failed parity always fails the bench,
+quick or not.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.configs.base import GTRACConfig
+from repro.core.planner import RoutePlanner, plan_route
+from repro.core.sharding import ShardedAnchorRegistry
+from repro.core.types import ExecReport, HopReport
+from repro.sim.testbed import build_scaling_testbed
+
+SHARDS = (1, 4, 16)
+GATE_S = 16
+GATE_X = 2.0
+
+
+def _per_call_us(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _registries(n_peers: int, cfg: GTRACConfig, seed: int):
+    """Monolithic testbed + sharded registries over the SAME population
+    (replayed registration-for-registration, so parity is byte-for-byte).
+    S=1 is the true ``ShardedAnchorRegistry`` wrapper, not the factory's
+    monolithic shortcut — it measures pure sharding-layer overhead."""
+    bed = build_scaling_testbed(n_peers, cfg=cfg, seed=seed)
+    t = bed.anchor.snapshot(0.0)
+    sharded = {}
+    for s in SHARDS:
+        reg = ShardedAnchorRegistry(cfg, n_shards=s)
+        for i in range(len(t)):
+            pid = int(t.peer_ids[i])
+            reg.register(pid, int(t.layer_start[i]), int(t.layer_end[i]),
+                         now=0.0, trust=float(t.trust[i]),
+                         latency_ms=float(t.latency_ms[i]))
+            reg.heartbeat(pid, 0.0)
+        sharded[s] = reg
+    return bed, sharded
+
+
+def assert_parity(bed, sharded, cfg: GTRACConfig, tau: float = 0.8):
+    """S=1 and S>1 plans must be bit-identical to the monolithic anchor."""
+    tm = bed.anchor.snapshot(0.0)
+    pm = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes)
+    _, plan_m = plan_route(tm, bed.total_layers, cfg, tau=tau, planner=pm)
+    for s, reg in sharded.items():
+        ts = reg.snapshot(0.0)
+        assert np.array_equal(tm.peer_ids, ts.peer_ids), f"S={s} row order"
+        ps = RoutePlanner(bed.total_layers, k_best=cfg.k_best_routes)
+        _, plan_s = plan_route(ts, bed.total_layers, cfg, tau=tau,
+                               planner=ps)
+        assert plan_s.chain_rows == plan_m.chain_rows, f"S={s} chains"
+        assert plan_s.costs == plan_m.costs, f"S={s} costs"
+    print(f"parity: S={list(sharded)} plans bit-identical to monolithic",
+          flush=True)
+
+
+def run(n_peers: int = 1000, trials: int = 200, seed: int = 0,
+        quick: bool = False):
+    cfg = GTRACConfig(trust_decay_rate=0.01)   # sweeps do real decay work
+    bed, sharded = _registries(n_peers, cfg, seed)
+    assert_parity(bed, sharded, cfg)
+    pids = np.array(sorted(bed.peers), np.int64)
+    rng = np.random.default_rng(seed)
+    report_chain = [int(p) for p in pids[:4]]
+
+    results = {}
+    regs = {0: bed.anchor, **sharded}   # 0 = monolithic baseline row
+    for s, a in regs.items():
+        label = "mono" if s == 0 else f"S{s}"
+        now = [10.0]
+
+        def heartbeats():
+            now[0] += 1.0
+            a.heartbeat_all(pids, now[0])
+
+        def reports():
+            a.apply_report(ExecReport(
+                True, report_chain,
+                [HopReport(p, 50.0, True) for p in report_chain]))
+
+        def sweep():
+            now[0] += 1.0
+            a.sweep(now[0])
+
+        hb_us = _per_call_us(heartbeats, max(3, trials // 4)) / len(pids)
+        rep_us = _per_call_us(reports, trials)
+        sw_us = _per_call_us(sweep, max(3, trials // 4))
+        emit(f"sharding/heartbeat/{label}/N{n_peers}", hb_us,
+             f"{hb_us:.3f}us_per_heartbeat")
+        emit(f"sharding/apply_report/{label}/N{n_peers}", rep_us,
+             f"{rep_us:.1f}us_per_report")
+        emit(f"sharding/sweep/{label}/N{n_peers}", sw_us,
+             f"{sw_us:.1f}us_per_sweep")
+
+        # -- composed snapshot: no-change fast path ------------------------
+        a.snapshot(now[0])
+        nochange_us = _per_call_us(lambda: a.snapshot(now[0]), trials)
+        emit(f"sharding/snapshot/nochange/{label}/N{n_peers}", nochange_us,
+             f"{nochange_us:.2f}us")
+
+        # -- one dirty shard (a single trust write invalidates one shard;
+        #    the monolithic registry rebuilds everything) -------------------
+        def one_dirty():
+            a.set_trust(int(pids[0]),
+                        float(rng.uniform(0.5, 1.0)))
+            a.snapshot(now[0])
+
+        dirty1_us = _per_call_us(one_dirty, max(3, trials // 4))
+        emit(f"sharding/snapshot/one_dirty/{label}/N{n_peers}", dirty1_us,
+             f"{dirty1_us:.1f}us")
+
+        # -- every shard dirty (trust decay sweep touches all columns) -----
+        def all_dirty():
+            now[0] += 1.0
+            a.sweep(now[0])
+            a.snapshot(now[0])
+
+        dirtyN_us = _per_call_us(all_dirty, max(3, trials // 4))
+        emit(f"sharding/snapshot/all_dirty/{label}/N{n_peers}", dirtyN_us,
+             f"{dirtyN_us:.1f}us")
+        results[label] = {"heartbeat_us": hb_us, "report_us": rep_us,
+                          "sweep_us": sw_us, "nochange_us": nochange_us,
+                          "one_dirty_us": dirty1_us,
+                          "all_dirty_us": dirtyN_us}
+
+    ratio = results[f"S{GATE_S}"]["nochange_us"] / \
+        max(results["mono"]["nochange_us"], 1e-9)
+    gate_ok = ratio <= GATE_X
+    emit("sharding/gate", ratio * 100.0,
+         f"nochange_S{GATE_S}_vs_mono:{ratio:.2f}x(<= {GATE_X}x:{gate_ok})")
+    extra = {"bench": "bench_sharding", "n_peers": n_peers,
+             "trials": trials, "quick": quick,
+             "results": {k: {m: round(v, 3) for m, v in r.items()}
+                         for k, r in results.items()},
+             "nochange_ratio_S16_vs_mono": round(ratio, 3),
+             "gate_enforced": not quick}
+    if not quick:
+        # only the real (gated) measurement may claim the verdict key
+        extra["gate_nochange_le_2x"] = bool(gate_ok)
+    # quick smoke runs must not clobber the tracked gated measurement
+    write_json("BENCH_sharding.quick.json" if quick
+               else "BENCH_sharding.json",
+               prefix="sharding/", extra=extra)
+    if not gate_ok and not quick:
+        print(f"GATE FAILED: composed-snapshot no-change path "
+              f"{ratio:.2f}x monolithic at S={GATE_S} (need <= {GATE_X}x)",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny N, few trials, perf gate skipped "
+                         "(parity still asserted)")
+    ap.add_argument("--peers", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    n = args.peers if args.peers is not None else (120 if args.quick
+                                                   else 1000)
+    trials = args.trials if args.trials is not None else (8 if args.quick
+                                                          else 200)
+    run(n_peers=n, trials=trials, seed=args.seed, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

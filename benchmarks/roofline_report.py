@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import sys
-from collections import defaultdict
 
 from repro.configs import get_config, get_shape
 from repro.launch import roofline as rl

@@ -5,7 +5,6 @@
 """
 import time
 
-import numpy as np
 
 from repro.configs.base import GTRACConfig
 from repro.core.routing import gtrac_route

@@ -8,8 +8,8 @@ they are hashable and safe to close over in jitted functions.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -276,6 +276,16 @@ class GTRACConfig:
     # serving window router (serving/batch_router.py): max concurrent
     # streams admitted per token window
     router_max_batch: int = 64
+    # anchor sharding (core/sharding.py): number of AnchorRegistry shards
+    # behind the control plane (1 = monolithic) and the placement key
+    # ("peer" = stable peer-id hash, "layer" = layer-slot affinity)
+    anchor_shards: int = 1
+    shard_by: str = "peer"
+    # hedged window serving (core/hedging.py threaded through
+    # serving/gtrac_serve.run_queue): fire a backup hop when the primary
+    # exceeds hedge_quantile_factor x its latency estimate
+    hedge_enabled: bool = False
+    hedge_quantile_factor: float = 2.0
 
 
 def asdict(cfg) -> dict:

@@ -9,6 +9,8 @@ from repro.core.executor import ChainExecutor, find_replacement, split_reports
 from repro.core.planner import (CompiledGraph, RoutePlan, RoutePlanner,
                                 get_planner, plan_route)
 from repro.core.registry import AnchorRegistry, SeekerCache
+from repro.core.sharding import (Registry, ShardedAnchorRegistry,
+                                 make_registry, stable_peer_hash)
 from repro.core.risk import (chain_reliability, chain_risk, k_max, risk_bound,
                              trust_floor_for, verify_design_guarantee)
 from repro.core.routing import (ALGORITHMS, brute_force_route, gtrac_route,
@@ -25,5 +27,6 @@ __all__ = [
     "mr_route", "naive_route", "sp_route", "ExecReport", "HopReport",
     "PeerRecord", "PeerTable", "RegistryState", "RouteResult",
     "CompiledGraph", "RoutePlan", "RoutePlanner", "get_planner",
-    "plan_route",
+    "plan_route", "Registry", "ShardedAnchorRegistry", "make_registry",
+    "stable_peer_hash",
 ]

@@ -19,14 +19,25 @@ columnar ``RegistryState`` (shared zero-copy with its snapshot mirror) and
 each backup adopts the column arrays in O(#columns); backups only pay the
 O(P) record materialisation lazily, on first control-plane access after a
 promotion.
+
+With ``shards > 1`` the replica group runs ``ShardedAnchorRegistry``
+replicas and replication is **per shard**: each tick ships only the shards
+whose version advanced since the last sync (dirty-shard delta, tracked by
+the primary's per-shard version vector), and ``restore_shard`` promotes a
+backup's copy of ONE lost shard into the primary without copying the other
+S-1 shards — the shard-granular recovery path the composed-snapshot
+design exists for.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Union
 
 from repro.configs.base import GTRACConfig
 from repro.core.registry import AnchorRegistry
+from repro.core.sharding import ShardedAnchorRegistry, make_registry
 from repro.core.types import ExecReport, PeerTable
+
+AnyAnchor = Union[AnchorRegistry, ShardedAnchorRegistry]
 
 
 class ReplicatedAnchor:
@@ -34,22 +45,31 @@ class ReplicatedAnchor:
 
     def __init__(self, cfg: GTRACConfig, n_backups: int = 2,
                  sync_period_s: Optional[float] = None,
-                 primary_ttl_s: Optional[float] = None):
+                 primary_ttl_s: Optional[float] = None,
+                 shards: int = 1, shard_by: str = "peer"):
         self.cfg = cfg
-        self.replicas: List[AnchorRegistry] = [
-            AnchorRegistry(cfg) for _ in range(1 + n_backups)]
+        self.shards = int(shards)
+        self.replicas: List[AnyAnchor] = [
+            make_registry(cfg, shards=shards, shard_by=shard_by)
+            for _ in range(1 + n_backups)]
         self.primary_idx = 0
         self.alive = [True] * (1 + n_backups)
         self.sync_period_s = sync_period_s or cfg.gossip_period_s
         self.primary_ttl_s = primary_ttl_s or cfg.node_ttl_s
         self._last_sync = 0.0
         self._last_primary_seen = 0.0
+        # per-BACKUP per-shard versions last *delivered by a full state
+        # ship* (None = this backup never received that shard): a backup
+        # that was dead during a dirty-shard ship must get a full re-ship
+        # when it revives, and restore_shard must only adopt from a backup
+        # that actually holds a copy
+        self._shipped: dict = {}        # replica idx -> [version | None]*S
         self.failovers = 0
 
     # -- the AnchorRegistry surface (delegated to the primary) ---------------
 
     @property
-    def primary(self) -> AnchorRegistry:
+    def primary(self) -> AnyAnchor:
         return self.replicas[self.primary_idx]
 
     def register(self, *a, **kw):
@@ -68,6 +88,9 @@ class ReplicatedAnchor:
     def snapshot(self, now: float) -> PeerTable:
         return self.primary.snapshot(now)
 
+    def sweep(self, now: float, **kw) -> int:
+        return self.primary.sweep(now, **kw)
+
     def reset_trust(self) -> None:
         self.primary.reset_trust()
 
@@ -80,13 +103,52 @@ class ReplicatedAnchor:
     def tick(self, now: float) -> None:
         """Background replication: backups adopt the primary's columnar
         state (a handful of array refs + one heartbeat-column copy) instead
-        of deep-copying the entire peer-record map per backup."""
+        of deep-copying the entire peer-record map per backup.
+
+        Sharded groups replicate per shard with a dirty-shard delta: the
+        primary's per-shard version vector is compared against the versions
+        last shipped, and clean shards — whose only traffic since the last
+        ship was heartbeats (heartbeats never bump a shard's version) —
+        ship just their liveness column instead of the full state, so a
+        backup promoted later never sees stale heartbeats and TTL-expires
+        live peers."""
         if now - self._last_sync < self.sync_period_s:
             return
         self._last_sync = now
         if not self.alive[self.primary_idx]:
             return
-        state = self.primary.export_state()
+        primary = self.primary
+        if isinstance(primary, ShardedAnchorRegistry):
+            vec = primary.version_vector
+            states: dict = {}       # exported once per dirty shard
+            hbs: dict = {}          # exported once per clean shard
+            for i, rep in enumerate(self.replicas):
+                if i == self.primary_idx:
+                    continue
+                if not self.alive[i]:
+                    # a dead backup's state is gone; forget what it had so
+                    # revival triggers a full re-ship of every shard
+                    self._shipped.pop(i, None)
+                    continue
+                delivered = self._shipped.get(i) or \
+                    [None] * primary.n_shards
+                for s in range(primary.n_shards):
+                    if s in primary.lost_shards:
+                        continue    # never overwrite the last good copy
+                    if delivered[s] == vec[s]:
+                        # unchanged since this backup's last full ship:
+                        # only heartbeats moved (they never bump versions)
+                        if s not in hbs:
+                            hbs[s] = primary.export_shard_heartbeats(s)
+                        rep.adopt_shard_heartbeats(s, hbs[s])
+                    else:
+                        if s not in states:
+                            states[s] = primary.export_shard_state(s)
+                        rep.adopt_shard_state(s, states[s])
+                        delivered[s] = vec[s]
+                self._shipped[i] = delivered
+            return
+        state = primary.export_state()
         for i, rep in enumerate(self.replicas):
             if i != self.primary_idx and self.alive[i]:
                 rep.adopt_state(state)
@@ -104,5 +166,36 @@ class ReplicatedAnchor:
             if ok and i != self.primary_idx:
                 self.primary_idx = i
                 self.failovers += 1
+                self._shipped = {}     # new primary re-ships everything
                 return True
         raise RuntimeError("no live anchor replica to promote")
+
+    def restore_shard(self, shard: int) -> bool:
+        """Shard-granular recovery: the primary lost ONE shard (e.g. a
+        shard process crash simulated by ``lose_shard``); re-adopt that
+        shard's columnar state from the live backup holding the freshest
+        *delivered* copy (per the ship ledger — a backup that was dead or
+        never ticked does not qualify, so an empty replica can never
+        silently "restore" nothing). The primary's other S-1 shards —
+        including any trust updates newer than the last replication tick —
+        are untouched. Returns False if no live backup holds a copy (e.g.
+        loss before the first replication tick, or right after a failover
+        reset the ship ledger)."""
+        primary = self.primary
+        if not isinstance(primary, ShardedAnchorRegistry):
+            raise ValueError("restore_shard requires a sharded anchor group")
+        best = None
+        best_v = None
+        for i, rep in enumerate(self.replicas):
+            if i == self.primary_idx or not self.alive[i]:
+                continue
+            delivered = self._shipped.get(i)
+            v = delivered[shard] if delivered is not None else None
+            if v is not None and (best_v is None or v > best_v):
+                best, best_v = rep, v
+        if best is None:
+            return False
+        primary.adopt_shard_state(shard, best.export_shard_state(shard))
+        # adopt bumped the shard's version, so the next tick's per-backup
+        # version compare re-ships the restored state everywhere
+        return True

@@ -340,6 +340,45 @@ class AnchorRegistry:
         self._peers = {}
         self._touch(topo=True)
 
+    def export_heartbeats(self) -> np.ndarray:
+        """Liveness column only, in this registry's row order — the cheap
+        replication payload for ticks where nothing but heartbeats moved
+        (heartbeats never bump ``version``, so version-delta replication
+        would otherwise let a backup's liveness go stale)."""
+        return self._ensure_mirror().last_heartbeat.copy()
+
+    def adopt_heartbeats(self, hb: np.ndarray) -> None:
+        """Overwrite the liveness column from a replicated heartbeat
+        payload. Caller guarantees membership matches the exporter (ship
+        full state when it doesn't; a length mismatch is ignored and left
+        for the next full ship to repair). Versions stay untouched,
+        exactly like live heartbeat traffic.
+
+        While records are still pending (the usual passive-backup state)
+        this is O(#columns): the new column replaces the pending state's,
+        so lazy materialization stays lazy and picks it up later. Only a
+        registry with materialized records pays the per-record loop —
+        required so a later mirror rebuild from records cannot resurrect
+        stale heartbeats."""
+        if self._pending_state is not None:
+            st = self._pending_state
+            if len(hb) != len(st.peer_ids):
+                return
+            col = np.array(hb, np.float64)
+            # NB: the RegistryState object may be shared with sibling
+            # backups that received the same ship — reassigning the field
+            # hands them the identical fresh column, which is harmless
+            st.last_heartbeat = col
+            if self._mirror is not None:    # sweep path: mirror shares state
+                self._mirror.last_heartbeat = col
+            return
+        m = self._ensure_mirror()
+        if len(hb) != len(m.peer_ids):
+            return
+        m.last_heartbeat[:] = hb
+        for rec, t in zip(self.peers.values(), hb):
+            rec.last_heartbeat = float(t)
+
 
 class SeekerCache:
     """Seeker-side cached registry view Σ̃_t with background sync (§IV-A)."""

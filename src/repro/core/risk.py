@@ -4,7 +4,6 @@ from __future__ import annotations
 import math
 from typing import Sequence
 
-import numpy as np
 
 
 def chain_reliability(trusts: Sequence[float]) -> float:

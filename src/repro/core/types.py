@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -107,6 +107,11 @@ class RegistryState:
     successes: np.ndarray       # (P,) int64
     failures: np.ndarray        # (P,) int64
     profiles: List[str] = field(default_factory=list)
+    # global registration sequence numbers (core/sharding.py): lets a
+    # replicated shard reconstruct the sharded registry's composed-snapshot
+    # row order, so a promoted backup stays bit-identical to the primary.
+    # None for monolithic registries (row order IS registration order).
+    seq: Optional[np.ndarray] = None   # (P,) int64 or None
 
     def __len__(self) -> int:
         return len(self.peer_ids)

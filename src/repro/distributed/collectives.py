@@ -12,8 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from repro.distributed.compat import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 
 def int8_quantize(x, axis=None):

@@ -9,7 +9,7 @@ lost stage replicas (that IS the paper).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

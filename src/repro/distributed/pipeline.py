@@ -15,14 +15,12 @@ device group. Two execution modes:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 

@@ -8,7 +8,6 @@ this CPU container (dry-run / tests) and on a real pod.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas

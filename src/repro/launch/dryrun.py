@@ -21,7 +21,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config,
                            get_shape, shape_applicable)
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.distributed import sharding as sh
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, asdict
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import GTRACConfig
 from repro.models.api import build_model
 from repro.serving.engine import ServingEngine
 from repro.serving.gtrac_serve import GTRACPipelineServer
@@ -32,10 +33,24 @@ def main(argv=None):
                     help="gtrac mode: serve all requests concurrently via "
                          "the window-batched router (one batched DP per "
                          "token window) instead of per-token routing")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="anchor registry shards (1 = monolithic; >1 "
+                         "partitions peers across S AnchorRegistry shards "
+                         "by stable peer-id hash with composed snapshots)")
+    ap.add_argument("--shard-by", default="peer", choices=["peer", "layer"],
+                    help="shard placement key: peer-id hash or layer-slot "
+                         "affinity")
+    ap.add_argument("--hedged", action="store_true",
+                    help="hedged window serving: fire a backup hop when a "
+                         "primary exceeds its latency-quantile trigger")
     args = ap.parse_args(argv)
     if args.windowed and args.algorithm != "gtrac":
         ap.error("--windowed routes via the gtrac batch router; "
                  "--algorithm %s is only available per-token" % args.algorithm)
+    if args.hedged and not args.windowed:
+        ap.error("--hedged is a window-serving feature (run_queue); "
+                 "add --windowed — the per-token generate() path does "
+                 "not hedge")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -55,9 +70,12 @@ def main(argv=None):
             print(f"req {r.request_id}: {list(r.prompt)} -> {r.output}")
         return
 
+    gcfg = GTRACConfig(anchor_shards=args.shards, shard_by=args.shard_by,
+                       hedge_enabled=args.hedged)
     srv = GTRACPipelineServer(cfg, params,
                               layers_per_stage=args.layers_per_stage,
-                              algorithm=args.algorithm, seed=args.seed)
+                              algorithm=args.algorithm, seed=args.seed,
+                              gcfg=gcfg)
     if args.windowed:
         for _ in range(args.requests):
             prompt = rng.integers(1, cfg.vocab_size, size=8)
@@ -71,9 +89,11 @@ def main(argv=None):
                   f"{met.repairs} repairs, {met.failures} failures "
                   f"-> {r.output}")
         s = srv.router.stats
+        hedges = sum(r.metrics.hedges_fired for r in done)
         print(f"SSR: {ok}/{args.requests}  windows: {s.windows}  "
               f"batched DP calls: {s.device_calls} "
-              f"(vs {s.requests} per-token solves)")
+              f"(vs {s.requests} per-token solves)  "
+              f"anchor shards: {args.shards}  hedges fired: {hedges}")
         return
     ok = 0
     for rid in range(args.requests):

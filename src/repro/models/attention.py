@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
-from repro.models.common import Params, adtype, dense_init, pdtype, split_keys
+from repro.models.common import Params, dense_init, pdtype, split_keys
 
 
 # ---------------------------------------------------------------------------

@@ -19,9 +19,10 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import mamba2 as m2
 from repro.models.common import (Params, adtype, apply_norm,
-                                 chunked_cross_entropy, cross_entropy_loss,
-                                 embed_tokens, init_embeddings, init_norm,
-                                 logits_head, scan_or_unroll, split_keys)
+                                 chunked_cross_entropy,
+                                 cross_entropy_loss, embed_tokens,
+                                 init_embeddings, init_norm,
+                                 logits_head, scan_or_unroll)
 from repro.models.mlp import apply_mlp, init_mlp
 from repro.models.rope import positional_angles, apply_rotary
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.api import Model, build_model
+from repro.models.api import build_model
 
 
 @dataclass
@@ -37,12 +37,21 @@ class AdmissionQueue:
     trust-routed pipeline server tops its active stream set up to the
     window size each token step (continuous batching). Factored out of
     ``ServingEngine`` so both serving layers share one admission policy.
+
+    ``registry`` (any ``repro.core.sharding.Registry`` — monolithic or
+    sharded anchor) couples admission to registry hygiene: each window pop
+    that carries a clock runs one ``sweep(now)`` before requests are
+    admitted, so TTL expiry / trust decay land ahead of the window's
+    routing DP. With a sharded registry the sweep fans out per shard and
+    clean shards no-op without touching their snapshot versions.
     """
 
-    def __init__(self, max_batch: int = 64):
+    def __init__(self, max_batch: int = 64, registry=None):
         self.max_batch = int(max_batch)
+        self.registry = registry     # Optional[repro.core.sharding.Registry]
         self.pending: List[Request] = []
         self.admitted = 0
+        self.swept_peers = 0         # total peers TTL-expired by our sweeps
 
     def __len__(self) -> int:
         return len(self.pending)
@@ -51,8 +60,12 @@ class AdmissionQueue:
         self.pending.append(req)
         return req
 
-    def next_window(self, capacity: Optional[int] = None) -> List[Request]:
-        """Pop the next admission window (up to min(max_batch, capacity))."""
+    def next_window(self, capacity: Optional[int] = None,
+                    now: Optional[float] = None) -> List[Request]:
+        """Pop the next admission window (up to min(max_batch, capacity)).
+        When a registry and a clock are supplied, sweep first."""
+        if self.registry is not None and now is not None:
+            self.swept_peers += self.registry.sweep(now)
         n = self.max_batch if capacity is None \
             else max(0, min(self.max_batch, capacity))
         window, self.pending = self.pending[:n], self.pending[n:]

@@ -24,9 +24,11 @@ import numpy as np
 
 from repro.configs.base import GTRACConfig, ModelConfig
 from repro.core.executor import ChainExecutor, split_reports
+from repro.core.hedging import HedgedChainExecutor
 from repro.core.planner import RoutePlanner, plan_route
-from repro.core.registry import AnchorRegistry, SeekerCache
+from repro.core.registry import SeekerCache
 from repro.core.routing import ALGORITHMS
+from repro.core.sharding import make_registry
 from repro.distributed.pipeline import StagePartition
 from repro.models.common import apply_norm, embed_tokens, logits_head
 from repro.models.rope import positional_angles
@@ -87,6 +89,10 @@ class ServeMetrics:
     rerouted: int = 0
     token_latency_ms: List[float] = field(default_factory=list)
     infeasible: int = 0
+    # hedged window serving (cfg.hedge_enabled): cumulative hedge counters
+    # mirrored from the stream's HedgedChainExecutor after every window
+    hedges_fired: int = 0
+    hedges_won: int = 0
 
 
 @dataclass
@@ -95,7 +101,8 @@ class RoutedRequest(Request):
 
     metrics: ServeMetrics = field(default_factory=ServeMetrics)
     tokens: Optional[jnp.ndarray] = None    # (1, S) running token tensor
-    executor: Optional[ChainExecutor] = None
+    # ChainExecutor, or HedgedChainExecutor when cfg.hedge_enabled
+    executor: Optional[object] = None
 
 
 class GTRACPipelineServer:
@@ -116,7 +123,12 @@ class GTRACPipelineServer:
                                                 layers_per_stage)
         self.stage_fns = make_stage_fns(cfg, params, self.partition)
         rng = np.random.default_rng(seed)
-        anchor = AnchorRegistry(self.gcfg)
+        # any Registry (core/sharding.py): monolithic anchor for
+        # cfg.anchor_shards=1, hash-partitioned ShardedAnchorRegistry
+        # otherwise — the planner / window router consume its composed
+        # snapshot unchanged
+        anchor = make_registry(self.gcfg, shards=self.gcfg.anchor_shards,
+                               shard_by=self.gcfg.shard_by)
         peers: Dict[int, SimPeer] = {}
         replicas = replicas or {"honeypot": 2, "turtle": 2, "golden": 2}
         pid = 0
@@ -141,7 +153,10 @@ class GTRACPipelineServer:
         # window are solved in ONE batched device DP (serving/batch_router)
         self.router = BatchRouter(planner=self.planner, cfg=self.gcfg,
                                   total_layers=cfg.num_layers)
-        self.admission = AdmissionQueue(max_batch=self.gcfg.router_max_batch)
+        # admission owns the per-window registry sweep: with a sharded
+        # anchor it fans out per shard (clean shards no-op zero-copy)
+        self.admission = AdmissionQueue(max_batch=self.gcfg.router_max_batch,
+                                        registry=anchor)
         self._next_rid = 10_000   # submit() ids; clear of generate()'s
         self._stage_of = {}  # layer_start -> stage idx
         for i in range(self.partition.n_stages):
@@ -226,7 +241,15 @@ class GTRACPipelineServer:
                             prompt=np.asarray(prompt, np.int32),
                             max_new_tokens=max_new_tokens, tau=tau)
         req.tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        req.executor = ChainExecutor(self.gcfg, self._hop_fn(request_id))
+        hop = self._hop_fn(request_id)
+        # hedged window serving: behind cfg.hedge_enabled each stream runs
+        # the hedging executor (fires a backup hop when the primary exceeds
+        # hedge_quantile_factor x its latency estimate); plans splice
+        # identically in both executors, so routing is unchanged
+        req.executor = (HedgedChainExecutor(
+            self.gcfg, hop,
+            quantile_factor=self.gcfg.hedge_quantile_factor)
+            if self.gcfg.hedge_enabled else ChainExecutor(self.gcfg, hop))
         return self.admission.submit(req)
 
     def run_queue(self) -> List[RoutedRequest]:
@@ -240,11 +263,13 @@ class GTRACPipelineServer:
         served: List[RoutedRequest] = []
         active: List[RoutedRequest] = []
         while active or len(self.admission):
+            # admission sweeps the registry (per-shard fan-out when the
+            # anchor is sharded) before the window is admitted
             admitted = self.admission.next_window(
-                capacity=self.admission.max_batch - len(active))
+                capacity=self.admission.max_batch - len(active),
+                now=self.bed.now)
             active += admitted
             served += admitted
-            self.bed.anchor.sweep(self.bed.now)
             self.seeker.maybe_sync(self.bed.now)
             table = self.seeker.view()
             for req in active:
@@ -264,6 +289,10 @@ class GTRACPipelineServer:
                     self.bed.anchor.apply_report(rep)
                 req.metrics.repairs += int(report.repaired)
                 req.metrics.rerouted += int(report.repaired)
+                stats = getattr(req.executor, "stats", None)
+                if stats is not None:     # hedged executor: surface counts
+                    req.metrics.hedges_fired = stats.hedges_fired
+                    req.metrics.hedges_won = stats.hedges_won
                 window_ms = max(window_ms, report.total_latency_ms)
                 if not report.success:
                     req.metrics.failures += 1

@@ -19,9 +19,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.registry import AnchorRegistry
-from repro.sim.peers import (GOLDEN, HONEYPOT, PROFILES, TURTLE, SimPeer,
-                             make_peer)
+from repro.core.sharding import Registry, ShardedAnchorRegistry, \
+    make_registry
+from repro.sim.peers import PROFILES, SimPeer, make_peer
 
 GPT2_LARGE_LAYERS = 36
 SHARD_SIZES = (3, 6, 9)
@@ -32,7 +32,7 @@ class Testbed:
     cfg: GTRACConfig
     total_layers: int
     peers: Dict[int, SimPeer]
-    anchor: AnchorRegistry
+    anchor: Registry      # monolithic AnchorRegistry or sharded (sharding.py)
     rng: np.random.Generator
     now: float = 0.0
     partitioned: set = field(default_factory=set)
@@ -82,11 +82,87 @@ class Testbed:
     def peers_by_profile(self, name: str) -> List[SimPeer]:
         return [p for p in self.peers.values() if p.profile.name == name]
 
+    # -- shard-aware fault injection ------------------------------------------
+
+    def crash_anchor_shard(self, shard: int) -> List[int]:
+        """Crash every peer homed on one anchor shard (requires a sharded
+        anchor): their heartbeats stop, the shard's next sweep TTL-expires
+        them, and — because the other shards stay clean — only that shard's
+        columns rebuild in the composed snapshot. Returns the crashed ids."""
+        anchor = self.anchor
+        if not isinstance(anchor, ShardedAnchorRegistry):
+            raise ValueError("crash_anchor_shard needs a sharded anchor")
+        pids = [pid for pid in self.peers if anchor.owner_of(pid) == shard]
+        self.crash_peers(pids)
+        return pids
+
+
+@dataclass
+class ChurnStats:
+    """Outcome of ``run_churn``: what membership churn did to the anchor."""
+
+    joined: int = 0
+    crashed: int = 0
+    expired: int = 0              # TTL-swept by per-window sweeps
+    windows: int = 0
+    snapshots_rebuilt: int = 0    # composed/zero-copy snapshot rebuilds
+    final_peers: int = 0
+
+
+def run_churn(bed: Testbed, windows: int = 10, window_s: float = 2.0,
+              joins_per_window: int = 2, crashes_per_window: int = 2,
+              expire_after_s: Optional[float] = None,
+              profile: str = "golden") -> ChurnStats:
+    """Membership churn driver (shard-aware when the anchor is sharded).
+
+    Each window: crash a few random live peers (heartbeats stop), register
+    a few fresh replicas on random shard slots (the registry routes them to
+    their owning anchor shard by stable peer-id hash), advance the clock,
+    sweep (TTL-expiring peers dead longer than ``expire_after_s``, default
+    2 x node_ttl_s), and take a composed snapshot. Only shards whose
+    membership actually moved rebuild their snapshot columns; the stats
+    count how many windows rebuilt at all."""
+    cfg = bed.cfg
+    if expire_after_s is None:
+        expire_after_s = 2.0 * cfg.node_ttl_s
+    slots = []
+    for size in SHARD_SIZES:
+        for s in range(0, bed.total_layers, size):
+            slots.append((s, s + size))
+    stats = ChurnStats()
+    next_pid = max(bed.peers) + 1 if bed.peers else 0
+    prev = bed.anchor.snapshot(bed.now)
+    for _ in range(windows):
+        live = [pid for pid, p in bed.peers.items() if p.alive]
+        k = min(crashes_per_window, max(0, len(live) - 1))
+        if k:
+            idx = bed.rng.choice(len(live), size=k, replace=False)
+            bed.crash_peers([live[i] for i in idx])
+            stats.crashed += k
+        for _ in range(joins_per_window):
+            s, e = slots[int(bed.rng.integers(len(slots)))]
+            peer = make_peer(next_pid, s, e, PROFILES[profile], bed.rng)
+            bed.peers[next_pid] = peer
+            bed.anchor.register(next_pid, s, e, now=bed.now, profile=profile)
+            bed.anchor.heartbeat(next_pid, bed.now)
+            next_pid += 1
+            stats.joined += 1
+        bed.advance(window_s)
+        stats.expired += bed.anchor.sweep(bed.now,
+                                          expire_after_s=expire_after_s)
+        table = bed.anchor.snapshot(bed.now)
+        stats.snapshots_rebuilt += int(table is not prev)
+        prev = table
+        stats.windows += 1
+    stats.final_peers = len(bed.anchor.snapshot(bed.now))
+    return stats
+
 
 def build_paper_testbed(cfg: Optional[GTRACConfig] = None,
                         seed: int = 0,
                         total_layers: int = GPT2_LARGE_LAYERS,
                         replicas_per_slot: Dict[str, int] = None,
+                        shards: int = 1,
                         ) -> Testbed:
     """336 concurrent peers spanning all pipeline stages (§V-A).
 
@@ -97,7 +173,7 @@ def build_paper_testbed(cfg: Optional[GTRACConfig] = None,
     """
     cfg = cfg or GTRACConfig()
     rng = np.random.default_rng(seed)
-    anchor = AnchorRegistry(cfg)
+    anchor = make_registry(cfg, shards=shards, shard_by=cfg.shard_by)
     # profile proportions are not published; this mix reproduces the paper's
     # Fig. 3 ordering and magnitudes (see EXPERIMENTS.md §Reproduction)
     replicas = replicas_per_slot or {"honeypot": 4, "turtle": 5, "golden": 6}
@@ -134,12 +210,13 @@ def build_paper_testbed(cfg: Optional[GTRACConfig] = None,
 
 def build_scaling_testbed(n_peers: int, cfg: Optional[GTRACConfig] = None,
                           seed: int = 0,
-                          total_layers: int = GPT2_LARGE_LAYERS) -> Testbed:
+                          total_layers: int = GPT2_LARGE_LAYERS,
+                          shards: int = 1) -> Testbed:
     """Uniform-random testbed for the decision-overhead experiment (§VI-E):
     N peers spread across shard slots with mixed profiles."""
     cfg = cfg or GTRACConfig()
     rng = np.random.default_rng(seed)
-    anchor = AnchorRegistry(cfg)
+    anchor = make_registry(cfg, shards=shards, shard_by=cfg.shard_by)
     peers: Dict[int, SimPeer] = {}
     slots = []
     for size in SHARD_SIZES:

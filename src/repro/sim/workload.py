@@ -14,16 +14,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.configs.base import GTRACConfig
 from repro.core.executor import ChainExecutor, split_reports
 from repro.core.planner import RoutePlanner, plan_route
 from repro.core.registry import SeekerCache
 from repro.core.routing import ALGORITHMS
-from repro.core.types import ExecReport, PeerTable
 from repro.sim.peers import FAILURE_DETECT_FRACTION
 from repro.sim.testbed import Testbed
 

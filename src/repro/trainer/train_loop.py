@@ -8,7 +8,6 @@ exactly the function the multi-pod dry-run lowers and compiles.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax

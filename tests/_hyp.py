@@ -9,6 +9,8 @@ tests as skipped.
 """
 import pytest
 
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

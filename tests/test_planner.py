@@ -10,7 +10,6 @@ precomputed plan without a fresh search.
 import numpy as np
 import pytest
 
-from repro.configs.base import GTRACConfig
 from repro.core import (AnchorRegistry, ChainExecutor, brute_force_route,
                         gtrac_route, heap_dijkstra_route, plan_route)
 from repro.core.hedging import HedgedChainExecutor

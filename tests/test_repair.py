@@ -1,6 +1,4 @@
 """Bounded One-Shot Repair semantics (Alg. 1, lines 9–15)."""
-import numpy as np
-import pytest
 
 from repro.configs.base import GTRACConfig
 from repro.core import AnchorRegistry, ChainExecutor, find_replacement

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.configs.base import GTRACConfig
 from repro.core import (brute_force_route, gtrac_route, k_max, larac_route,
                         mr_route, naive_route, risk_bound, sp_route,
                         trust_floor_for, verify_design_guarantee)

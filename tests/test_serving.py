@@ -1,6 +1,5 @@
 """Serving tests: engine correctness + G-TRAC routed pipeline produces the
 same tokens as monolithic execution, and survives injected failures."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import GTRACConfig
 from repro.models.api import build_model
 from repro.serving.engine import ServingEngine
 from repro.serving.gtrac_serve import GTRACPipelineServer

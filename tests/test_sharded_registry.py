@@ -1,0 +1,375 @@
+"""Sharded anchor registries: composed-snapshot parity, version-vector
+staleness, per-shard replication / shard loss, and churn (PR 3)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.core.failover import ReplicatedAnchor
+from repro.core.planner import RoutePlanner, plan_route
+from repro.core.registry import AnchorRegistry
+from repro.core.sharding import (ShardedAnchorRegistry, make_registry,
+                                 stable_peer_hash)
+from repro.core.types import ExecReport, HopReport
+
+L = 12
+
+
+def populate(reg, n=48, seed=1, now=0.0):
+    rng = np.random.default_rng(seed)
+    for pid in range(n):
+        s = (pid % 4) * 3
+        reg.register(pid, s, s + 3, now=now,
+                     trust=float(rng.uniform(0.5, 1.0)),
+                     latency_ms=float(rng.uniform(10, 300)))
+        reg.heartbeat(pid, now)
+
+
+def both(cfg, n_shards, n=48, seed=1):
+    mono = AnchorRegistry(cfg)
+    sharded = ShardedAnchorRegistry(cfg, n_shards=n_shards)
+    populate(mono, n=n, seed=seed)
+    populate(sharded, n=n, seed=seed)
+    return mono, sharded
+
+
+def assert_tables_equal(tm, ts):
+    assert np.array_equal(tm.peer_ids, ts.peer_ids)
+    assert np.array_equal(tm.layer_start, ts.layer_start)
+    assert np.array_equal(tm.layer_end, ts.layer_end)
+    assert np.array_equal(tm.trust, ts.trust)        # bit-equal, not approx
+    assert np.array_equal(tm.latency_ms, ts.latency_ms)
+    assert np.array_equal(tm.alive, ts.alive)
+
+
+def assert_plans_equal(cfg, tm, ts, tau=0.8):
+    pm, ps = RoutePlanner(L, k_best=4), RoutePlanner(L, k_best=4)
+    _, plan_m = plan_route(tm, L, cfg, tau=tau, planner=pm)
+    _, plan_s = plan_route(ts, L, cfg, tau=tau, planner=ps)
+    assert plan_m.chain_rows == plan_s.chain_rows
+    assert plan_m.costs == plan_s.costs
+    return plan_m
+
+
+class TestComposedParity:
+    @pytest.mark.parametrize("n_shards", [1, 3, 4, 16])
+    def test_bit_identical_plans(self, gcfg, n_shards):
+        """S=1 and S>1 composed snapshots route bit-identically to the
+        monolithic registry over the same peers."""
+        mono, sharded = both(gcfg, n_shards)
+        tm, ts = mono.snapshot(0.0), sharded.snapshot(0.0)
+        assert_tables_equal(tm, ts)
+        plan = assert_plans_equal(gcfg, tm, ts)
+        assert plan.feasible
+
+    def test_parity_survives_reports_and_heartbeats(self, gcfg):
+        mono, sharded = both(gcfg, 4)
+        rep_fail = ExecReport(False, [3], [HopReport(3, 120.0, False)],
+                              failed_peer=3)
+        rep_ok = ExecReport(True, [0, 5, 9],
+                            [HopReport(p, 40.0, True) for p in (0, 5, 9)])
+        for reg in (mono, sharded):
+            reg.apply_report(rep_fail)
+            reg.apply_report(rep_ok)
+            reg.heartbeat_all(range(0, 48, 2), 5.0)
+        tm, ts = mono.snapshot(6.0), sharded.snapshot(6.0)
+        assert_tables_equal(tm, ts)
+        assert_plans_equal(gcfg, tm, ts)
+
+    def test_parity_after_deregister_and_reregister(self, gcfg):
+        """Monolithic dict semantics: re-registering an existing peer keeps
+        its position; deregister + register moves it to the end."""
+        mono, sharded = both(gcfg, 4)
+        for reg in (mono, sharded):
+            reg.register(7, 3, 6, now=1.0, trust=0.9, latency_ms=50.0)
+            reg.heartbeat(7, 1.0)          # re-register in place
+            reg.deregister(11)
+            reg.register(11, 6, 9, now=1.0, trust=0.7, latency_ms=80.0)
+            reg.heartbeat(11, 1.0)         # back at the end
+        tm, ts = mono.snapshot(2.0), sharded.snapshot(2.0)
+        assert_tables_equal(tm, ts)
+        assert_plans_equal(gcfg, tm, ts)
+
+    def test_cross_shard_tau_floor_pruning_parity(self):
+        """Sweep (TTL expiry + decay toward init_trust) prunes the same
+        peers on both sides, and tau-floor masks then match row for row."""
+        cfg = GTRACConfig(ttl_expire_factor=2.0, trust_decay_rate=0.02,
+                          init_trust=0.9)
+        mono, sharded = both(cfg, 4)
+        for reg in (mono, sharded):        # odd pids go silent -> expire
+            reg.heartbeat_all(range(0, 48, 2), 40.0)
+        e_m = mono.sweep(50.0)
+        e_s = sharded.sweep(50.0)
+        assert e_m == e_s == 24
+        tm, ts = mono.snapshot(50.0), sharded.snapshot(50.0)
+        assert_tables_equal(tm, ts)
+        for tau in (0.6, 0.8, 0.95):
+            mask_m = tm.alive & (tm.trust >= tau)
+            mask_s = ts.alive & (ts.trust >= tau)
+            assert np.array_equal(mask_m, mask_s)
+            assert_plans_equal(cfg, tm, ts, tau=tau)
+
+    def test_layer_affinity_placement(self, gcfg):
+        """shard_by='layer': all replicas of one stage slot share a shard;
+        plans still bit-identical."""
+        mono = AnchorRegistry(gcfg)
+        sharded = ShardedAnchorRegistry(gcfg, n_shards=4, shard_by="layer")
+        populate(mono)
+        populate(sharded)
+        for pid in range(48):
+            expect = stable_peer_hash((pid % 4) * 3) % 4
+            assert sharded.owner_of(pid) == expect
+        assert_tables_equal(mono.snapshot(0.0), sharded.snapshot(0.0))
+        assert_plans_equal(gcfg, mono.snapshot(0.0), sharded.snapshot(0.0))
+
+    def test_make_registry_factory(self, gcfg):
+        assert isinstance(make_registry(gcfg, 1), AnchorRegistry)
+        reg = make_registry(gcfg, 8)
+        assert isinstance(reg, ShardedAnchorRegistry)
+        assert reg.n_shards == 8
+
+
+class TestVersionVector:
+    def test_nochange_fast_path_is_zero_copy(self, gcfg):
+        _, sharded = both(gcfg, 4)
+        t0 = sharded.snapshot(0.0)
+        assert sharded.snapshot(1.0) is t0            # identical object
+        sharded.heartbeat(0, 1.0)                     # no liveness flip
+        assert sharded.snapshot(1.0) is t0
+        assert sharded.version_vector == tuple(
+            sh.version for sh in sharded.shards)
+
+    def test_only_dirty_shard_rebuilds(self, gcfg):
+        _, sharded = both(gcfg, 4)
+        sharded.snapshot(0.0)
+        shard_tables = [sh.snapshot(0.0) for sh in sharded.shards]
+        victim = 5
+        owner = sharded.owner_of(victim)
+        sharded.apply_report(ExecReport(
+            True, [victim], [HopReport(victim, 33.0, True)]))
+        t1 = sharded.snapshot(0.0)
+        for i, sh in enumerate(sharded.shards):
+            same = sh.snapshot(0.0) is shard_tables[i]
+            assert same == (i != owner)
+        assert float(t1.trust[t1.index_of(victim)]) > 0.0
+
+    def test_version_monotonic_and_distinct_per_rebuild(self, gcfg):
+        _, sharded = both(gcfg, 4)
+        seen = []
+        t = sharded.snapshot(0.0)
+        seen.append(t.version)
+        sharded.set_trust(3, 0.42)
+        t = sharded.snapshot(0.0)
+        seen.append(t.version)
+        sharded.register(99, 0, 3, now=0.0)
+        sharded.heartbeat(99, 0.0)
+        topo_before = sharded.topo_version
+        t = sharded.snapshot(0.0)
+        seen.append(t.version)
+        assert sharded.topo_version == topo_before + 1
+        assert seen == sorted(seen) and len(set(seen)) == len(seen)
+
+    def test_liveness_flip_without_shard_mutation(self, gcfg):
+        """Staleness detection: no shard version moved (heartbeats mutate
+        mirrors in place), yet the composed snapshot must see TTL expiry
+        through its write-through heartbeat column."""
+        _, sharded = both(gcfg, 4)
+        t0 = sharded.snapshot(0.0)
+        assert t0.alive.all()
+        vec = sharded.version_vector
+        live = list(range(0, 48, 3))
+        sharded.heartbeat_all(live, 20.0)
+        t1 = sharded.snapshot(21.0)
+        assert sharded.version_vector == vec     # shards never bumped
+        assert t1 is not t0 and t1.version > t0.version
+        expect = np.zeros(48, bool)
+        expect[live] = True
+        assert np.array_equal(t1.alive, expect)
+        # columns other than alive are shared zero-copy with t0
+        assert t1.trust is t0.trust and t1.peer_ids is t0.peer_ids
+
+    def test_stale_seeker_keyed_by_version(self, gcfg):
+        """A consumer holding an old composed table can detect staleness
+        purely from the version counter."""
+        _, sharded = both(gcfg, 4)
+        old = sharded.snapshot(0.0)
+        sharded.set_trust(1, 0.11)
+        new = sharded.snapshot(0.0)
+        assert new.version > old.version
+        assert old.version != new.version  # distinct tables, distinct keys
+
+
+class TestShardReplication:
+    def test_backup_promotes_with_composed_parity(self, gcfg):
+        ra = ReplicatedAnchor(gcfg, n_backups=1, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        before = ra.snapshot(0.5)
+        ra.crash_primary()
+        assert ra.maybe_failover(now=100.0)
+        # registration order (the seq column) survived replication: the
+        # promoted backup's composed snapshot is row-identical
+        after = ra.snapshot(100.0)
+        assert np.array_equal(before.peer_ids, after.peer_ids)
+        assert np.array_equal(before.trust, after.trust)
+
+    def test_shard_loss_and_single_shard_restore(self, gcfg):
+        ra = ReplicatedAnchor(gcfg, n_backups=2, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        # post-replication update on a shard that will SURVIVE the loss
+        survivor = next(pid for pid in range(48)
+                        if ra.primary.owner_of(pid) != 2)
+        ra.primary.set_trust(survivor, 0.123)
+        before = ra.snapshot(1.0)
+        lost = ra.primary.lose_shard(2)
+        assert lost > 0
+        assert len(ra.snapshot(1.1)) == 48 - lost
+        assert ra.restore_shard(2)
+        after = ra.snapshot(1.2)
+        # full parity incl. registration order...
+        assert np.array_equal(before.peer_ids, after.peer_ids)
+        assert np.array_equal(before.trust, after.trust)
+        # ...and the survivor shard's newer-than-replication write intact
+        assert float(after.trust[after.index_of(survivor)]) == 0.123
+
+    def test_dirty_shard_delta_replication(self, gcfg):
+        ra = ReplicatedAnchor(gcfg, n_backups=1, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        vec = list(ra._shipped[1])
+        assert tuple(vec) == ra.primary.version_vector
+        # a quiet tick re-ships no state (delivery ledger unchanged)
+        ra.tick(2 * gcfg.gossip_period_s + 0.2)
+        assert ra._shipped[1] == vec
+        ra.primary.set_trust(0, 0.5)
+        ra.tick(3 * gcfg.gossip_period_s + 0.3)
+        assert ra._shipped[1] != vec
+        assert ra.replicas[1].peers[0].trust == 0.5
+
+    def test_tick_between_loss_and_restore_preserves_backup_copy(self, gcfg):
+        """A gossip tick firing after lose_shard must not replicate the
+        emptied shard over the backups' last good copy — restore_shard
+        would otherwise 'restore' nothing and report success."""
+        ra = ReplicatedAnchor(gcfg, n_backups=1, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        before = ra.snapshot(1.0)
+        lost = ra.primary.lose_shard(2)
+        ra.tick(2 * gcfg.gossip_period_s + 0.2)   # the racing tick
+        assert ra.restore_shard(2)
+        after = ra.snapshot(2.0)
+        assert len(after) == len(before) == 48
+        assert np.array_equal(before.peer_ids, after.peer_ids)
+        assert lost > 0 and not ra.primary.lost_shards
+
+    def test_restore_never_adopts_from_a_copyless_backup(self, gcfg):
+        """restore_shard must consult the ship ledger: a backup that was
+        dead during the only full ship (then revived without a tick) holds
+        no copy, and adopting its empty shard would silently lose peers
+        while another live backup still has the real state."""
+        ra = ReplicatedAnchor(gcfg, n_backups=2, shards=4)
+        populate(ra)
+        # before any tick, nobody holds a copy at all
+        ra.primary.lose_shard(0)
+        assert not ra.restore_shard(0)
+        # re-seed shard 0 and ship while backup 1 is dead
+        for pid in range(48):
+            if ra.primary.owner_of(pid) is None:
+                seg = (pid % 4) * 3
+                ra.register(pid, seg, seg + 3, now=0.0)
+                ra.heartbeat(pid, 0.0)
+        ra.alive[1] = False
+        ra.tick(gcfg.gossip_period_s + 0.1)        # only backup 2 gets state
+        ra.alive[1] = True                         # revives, no tick yet
+        n_before = len(ra.snapshot(1.0))
+        lost = ra.primary.lose_shard(2)
+        assert ra.restore_shard(2)                 # must pick backup 2
+        assert len(ra.snapshot(1.1)) == n_before
+        assert lost > 0
+
+    def test_revived_backup_gets_full_reship(self, gcfg):
+        """A backup that was dead during a dirty-shard ship must receive
+        the full state when it revives — heartbeat-only deltas against
+        state it never saw would leave it stale forever."""
+        ra = ReplicatedAnchor(gcfg, n_backups=2, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        ra.alive[2] = False                        # backup 2 goes down
+        ra.primary.set_trust(0, 0.123)
+        ra.tick(2 * gcfg.gossip_period_s + 0.2)    # ships past backup 2
+        assert ra.replicas[1].peers[0].trust == 0.123
+        ra.alive[2] = True                         # revival
+        ra.tick(3 * gcfg.gossip_period_s + 0.3)
+        assert ra.replicas[2].peers[0].trust == 0.123
+
+    def test_clean_shards_ship_heartbeats(self, gcfg):
+        """Heartbeats never bump shard versions, so the dirty-delta tick
+        must still ship liveness columns — otherwise a backup promoted
+        after a quiet stretch TTL-expires every live peer."""
+        ra = ReplicatedAnchor(gcfg, n_backups=1, shards=4)
+        populate(ra)
+        ra.tick(gcfg.gossip_period_s + 0.1)       # full ship at t~2
+        vec = ra._shipped
+        # a long quiet stretch: only heartbeat traffic, well past TTL
+        t = 100.0
+        for pid in range(48):
+            ra.heartbeat(pid, t)
+        ra.tick(t)                                # clean shards: hb-only ship
+        assert ra._shipped == vec                 # no state re-ship happened
+        ra.crash_primary()
+        assert ra.maybe_failover(now=t + 1.0)
+        promoted = ra.snapshot(t + 1.0)
+        assert promoted.alive.all()               # liveness survived
+        assert ra.primary.sweep(t + 1.0, expire_after_s=30.0) == 0
+
+    def test_cross_shard_move_keeps_registration_order(self, gcfg):
+        """shard_by='layer': re-registering a peer onto a different layer
+        slot moves it across shards but, like the monolithic dict, keeps
+        its registration position in the composed row order."""
+        mono = AnchorRegistry(gcfg)
+        sharded = ShardedAnchorRegistry(gcfg, n_shards=4, shard_by="layer")
+        populate(mono, n=24)
+        populate(sharded, n=24)
+        mover = 5
+        old = sharded.owner_of(mover)
+        for reg in (mono, sharded):               # 0->3 moves the shard
+            reg.register(mover, 6, 9, now=1.0, trust=0.8, latency_ms=40.0)
+            reg.heartbeat(mover, 1.0)
+        assert sharded.owner_of(mover) != old
+        tm, ts = mono.snapshot(2.0), sharded.snapshot(2.0)
+        assert_tables_equal(tm, ts)
+        assert_plans_equal(gcfg, tm, ts)
+
+    def test_monolithic_group_unchanged(self, gcfg):
+        """shards=1 keeps the original whole-state replication path."""
+        ra = ReplicatedAnchor(gcfg, n_backups=1)
+        assert isinstance(ra.primary, AnchorRegistry)
+        populate(ra, n=6)
+        ra.tick(gcfg.gossip_period_s + 0.1)
+        assert len(ra.replicas[1].peers) == 6
+        with pytest.raises(ValueError):
+            ra.restore_shard(0)
+
+
+class TestChurn:
+    def test_shard_aware_churn_keeps_routing_feasible(self):
+        from repro.core.planner import plan_route as pr
+        from repro.sim.testbed import build_scaling_testbed, run_churn
+        cfg = GTRACConfig()
+        bed = build_scaling_testbed(96, cfg=cfg, seed=0, shards=4)
+        stats = run_churn(bed, windows=8, window_s=10.0,
+                          joins_per_window=3, crashes_per_window=2,
+                          expire_after_s=25.0)
+        assert stats.joined == 24 and stats.crashed == 16
+        assert stats.expired > 0            # TTL sweeps really fired
+        assert stats.snapshots_rebuilt > 0
+        t = bed.anchor.snapshot(bed.now)
+        r, _ = pr(t, bed.total_layers, cfg, tau=0.0)
+        assert r.feasible
+
+    def test_crash_anchor_shard(self, gcfg):
+        from repro.sim.testbed import build_scaling_testbed
+        bed = build_scaling_testbed(64, cfg=gcfg, seed=0, shards=4)
+        pids = bed.crash_anchor_shard(1)
+        assert pids and all(bed.anchor.owner_of(p) == 1 for p in pids)
+        assert all(not bed.peers[p].alive for p in pids)

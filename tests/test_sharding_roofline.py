@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, get_config, get_shape
+from repro.configs import get_config, get_shape
 from repro.launch import roofline as rl
 from repro.models.api import build_model
 

@@ -1,9 +1,7 @@
 """Simulator tests: paper testbed construction, workload metrics, fault
 injection (crashes + partitions), honey-pot isolation dynamics."""
-import numpy as np
 import pytest
 
-from repro.configs.base import GTRACConfig
 from repro.sim.testbed import build_paper_testbed, build_scaling_testbed
 from repro.sim.workload import run_workload
 

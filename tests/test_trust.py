@@ -1,7 +1,6 @@
 """Trust protocol tests: EWMA, asymmetric updates, liveness, gossip
 staleness, and the jitted JAX twin."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from _hyp import given, settings, st
 
