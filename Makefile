@@ -6,7 +6,11 @@
 #   make bench-sharding sharded vs monolithic anchor -> BENCH_sharding.json
 #                       (FAILS unless composed-snapshot no-change path
 #                        <= 2x monolithic at S=16; parity always asserted)
-#   make bench-smoke    CI smoke lane: all three benches in --quick mode
+#   make bench-sync     gossip sync plane -> BENCH_sync.json
+#                       (FAILS unless single-report delta wire bytes
+#                        <= 10% of the full snapshot at N=1000; seeker
+#                        parity + post-heal convergence always asserted)
+#   make bench-smoke    CI smoke lane: all four benches in --quick mode
 #                       (tiny N/R, perf gates skipped; writes
 #                        BENCH_*.quick.json, never the tracked JSONs)
 #   make lint           compile-check + ruff (pyflakes fallback). HARD
@@ -21,7 +25,8 @@ PY        ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench-routing bench-serving bench-sharding bench-smoke lint
+.PHONY: test bench-routing bench-serving bench-sharding bench-sync \
+	bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -35,10 +40,14 @@ bench-serving:
 bench-sharding:
 	$(PY) -m benchmarks.bench_sharding
 
+bench-sync:
+	$(PY) -m benchmarks.bench_sync
+
 bench-smoke:
 	$(PY) -m benchmarks.bench_scaling --quick
 	$(PY) -m benchmarks.bench_serving --quick
 	$(PY) -m benchmarks.bench_sharding --quick
+	$(PY) -m benchmarks.bench_sync --quick
 
 lint:
 	$(PY) -m compileall -q src benchmarks tests examples

@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.routing_jax import layered_dp
 from repro.kernels import ref
 from repro.kernels.ops import flash_attention
-from repro.core.routing_jax import layered_dp
 
 KEY = jax.random.PRNGKey(0)
 

@@ -26,8 +26,14 @@ import numpy as np
 from benchmarks.common import emit, write_json
 from repro.configs.base import GTRACConfig
 from repro.core.planner import RoutePlanner, plan_route
-from repro.core.routing import (gtrac_route, heap_dijkstra_route, larac_route,
-                                mr_route, naive_route, sp_route)
+from repro.core.routing import (
+    gtrac_route,
+    heap_dijkstra_route,
+    larac_route,
+    mr_route,
+    naive_route,
+    sp_route,
+)
 from repro.core.routing_jax import route_batched
 from repro.sim.testbed import build_scaling_testbed
 

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import time
 
-
 from benchmarks.common import emit
 from repro.sim.testbed import build_paper_testbed
 from repro.sim.workload import run_workload

@@ -2,7 +2,6 @@
 requests), mean + P99 per algorithm × generation length."""
 from __future__ import annotations
 
-
 import numpy as np
 
 from benchmarks.common import emit

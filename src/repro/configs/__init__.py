@@ -5,15 +5,15 @@ import importlib
 from typing import Dict, List
 
 from repro.configs.base import (  # noqa: F401  (re-exported)
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
     GTRACConfig,
     MeshConfig,
     ModelConfig,
     ShapeConfig,
-    SHAPES,
-    TRAIN_4K,
-    PREFILL_32K,
-    DECODE_32K,
-    LONG_500K,
     TrainConfig,
     shape_applicable,
 )

@@ -286,6 +286,34 @@ class GTRACConfig:
     # exceeds hedge_quantile_factor x its latency estimate
     hedge_enabled: bool = False
     hedge_quantile_factor: float = 2.0
+    # gossip sync plane (src/repro/sync/): delta-encoded dissemination of
+    # per-shard registry state from anchors to edge seeker caches.
+    # gossip_enabled routes serving from a gossip-synced seeker instead of
+    # in-process snapshots; per round each seeker pulls at most
+    # gossip_fanout dirty shards (the rest wait — bandwidth cap), and the
+    # publisher retains gossip_history past per-shard states as delta
+    # bases (older seekers fall back to a full shard snapshot).
+    gossip_enabled: bool = False
+    gossip_fanout: int = 2
+    gossip_history: int = 8
+    # heartbeat-column refresh cadence, as a fraction of node_ttl_s:
+    # steady-state heartbeat traffic never bumps shard versions (it would
+    # make every delta ship every row), so each seeker's mirror of a
+    # shard's liveness column is re-shipped whole once it is older than
+    # gossip_hb_refresh_frac x node_ttl_s — 8 bytes/peer amortized over
+    # half a TTL, the price of never routing to a TTL-expired mirror
+    # (<= 0 disables; liveness then only refreshes on full syncs)
+    gossip_hb_refresh_frac: float = 0.5
+    # staleness-bounded routing (sync/seeker.SeekerCache.routing_view):
+    # per stale gossip round a shard's peers lose gossip_stale_margin of
+    # routing trust (an inflated trust floor, capped at
+    # gossip_stale_margin_max), and trust is first discounted toward
+    # init_trust at gossip_stale_decay per second of staleness — the
+    # seeker-side mirror of the anchor sweep's trust_decay_rate. Both
+    # default off; a fully-synced cache routes bit-identically either way.
+    gossip_stale_margin: float = 0.0
+    gossip_stale_margin_max: float = 0.3
+    gossip_stale_decay: float = 0.0
 
 
 def asdict(cfg) -> dict:

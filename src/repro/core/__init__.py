@@ -6,18 +6,35 @@ Public surface:
                             gtrac_route, ALGORITHMS, trust_floor_for, ...)
 """
 from repro.core.executor import ChainExecutor, find_replacement, split_reports
-from repro.core.planner import (CompiledGraph, RoutePlan, RoutePlanner,
-                                get_planner, plan_route)
+from repro.core.planner import CompiledGraph, RoutePlan, RoutePlanner, get_planner, plan_route
 from repro.core.registry import AnchorRegistry, SeekerCache
-from repro.core.sharding import (Registry, ShardedAnchorRegistry,
-                                 make_registry, stable_peer_hash)
-from repro.core.risk import (chain_reliability, chain_risk, k_max, risk_bound,
-                             trust_floor_for, verify_design_guarantee)
-from repro.core.routing import (ALGORITHMS, brute_force_route, gtrac_route,
-                                heap_dijkstra_route, larac_route, mr_route,
-                                naive_route, sp_route)
-from repro.core.types import (ExecReport, HopReport, PeerRecord, PeerTable,
-                              RegistryState, RouteResult)
+from repro.core.risk import (
+    chain_reliability,
+    chain_risk,
+    k_max,
+    risk_bound,
+    trust_floor_for,
+    verify_design_guarantee,
+)
+from repro.core.routing import (
+    ALGORITHMS,
+    brute_force_route,
+    gtrac_route,
+    heap_dijkstra_route,
+    larac_route,
+    mr_route,
+    naive_route,
+    sp_route,
+)
+from repro.core.sharding import Registry, ShardedAnchorRegistry, make_registry, stable_peer_hash
+from repro.core.types import (
+    ExecReport,
+    HopReport,
+    PeerRecord,
+    PeerTable,
+    RegistryState,
+    RouteResult,
+)
 
 __all__ = [
     "AnchorRegistry", "SeekerCache", "ChainExecutor", "find_replacement",

@@ -18,7 +18,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-
 from repro.configs.base import GTRACConfig
 from repro.core.executor import find_replacement, try_plan_splice
 from repro.core.types import ExecReport, HopReport, PeerTable

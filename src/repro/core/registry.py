@@ -26,6 +26,13 @@ Snapshot-versioning contract (consumed by core/planner.py):
 * ``export_state`` / ``adopt_state`` replicate a registry as a handful of
   column arrays (no ``copy.deepcopy``); adopted state materialises back
   into ``PeerRecord`` objects lazily on first control-plane access.
+* every registration is stamped with a monotonic *sequence number*
+  (``_seq``): row order in the records dict is always ascending in seq
+  (fresh arrivals append; re-registering a present peer keeps its
+  position and its seq, exactly the dict semantics), so ``export_state``
+  ships a ``seq`` column that makes row order location-independent — the
+  contract the gossip sync plane (``repro.sync``) and the sharded
+  composed snapshot (core/sharding.py) both order by.
 """
 from __future__ import annotations
 
@@ -106,6 +113,11 @@ class AnchorRegistry:
         self._mirror: Optional[_Mirror] = None
         self._table: Optional[PeerTable] = None
         self._last_sweep = 0.0
+        # registration sequence: peer_id -> monotonic arrival stamp; row
+        # order in the records dict is always ascending in seq (see the
+        # module docstring) — the sync plane's ordering contract
+        self._seq: Dict[int, int] = {}
+        self._seq_next = 0
 
     # -- record access -------------------------------------------------------
 
@@ -155,12 +167,19 @@ class AnchorRegistry:
             last_heartbeat=now,
             profile=profile,
         )
-        self.peers[peer_id] = rec
+        peers = self.peers
+        if peer_id not in peers:
+            # fresh arrival (or return after deregister / TTL expiry):
+            # appended at the dict's end with a new sequence stamp
+            self._seq[peer_id] = self._seq_next
+            self._seq_next += 1
+        peers[peer_id] = rec
         self._touch(topo=True)
         return rec
 
     def deregister(self, peer_id: int) -> None:
         if self.peers.pop(peer_id, None) is not None:
+            self._seq.pop(peer_id, None)
             self._touch(topo=True)
 
     # -- liveness -----------------------------------------------------------
@@ -236,6 +255,8 @@ class AnchorRegistry:
         self.version += 1
         if n_expired:
             self.topo_version += 1
+            for pid in m.peer_ids[~keep]:
+                self._seq.pop(int(pid), None)
         self._mirror = _Mirror.from_state(state)
         self._table = None
         return n_expired
@@ -331,13 +352,23 @@ class AnchorRegistry:
             last_heartbeat=m.last_heartbeat.copy(),
             successes=m.successes, failures=m.failures,
             profiles=m.profiles,
+            seq=np.fromiter((self._seq[int(p)] for p in m.peer_ids),
+                            np.int64, len(m.peer_ids)),
         )
 
     def adopt_state(self, state: RegistryState) -> None:
         """Replace this registry's contents with a replicated column-array
-        state. O(#columns) — records rematerialize lazily on access."""
+        state. O(#columns) — records rematerialize lazily on access. The
+        seq column (when shipped) is adopted too, so a promoted backup
+        continues the exporter's registration sequence."""
         self._pending_state = state
         self._peers = {}
+        if state.seq is not None:
+            self._seq = {int(p): int(q)
+                         for p, q in zip(state.peer_ids, state.seq)}
+        else:
+            self._seq = {int(p): i for i, p in enumerate(state.peer_ids)}
+        self._seq_next = max(self._seq.values(), default=-1) + 1
         self._touch(topo=True)
 
     def export_heartbeats(self) -> np.ndarray:

@@ -43,15 +43,13 @@ on the monolithic path) and a ``ShardedAnchorRegistry`` otherwise.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, Iterable, List, Optional, Protocol, Tuple, \
-    runtime_checkable
+from typing import Dict, Iterable, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.registry import AnchorRegistry, _REGISTRY_IDS
-from repro.core.types import (ExecReport, PeerRecord, PeerTable,
-                              RegistryState)
+from repro.core.registry import _REGISTRY_IDS, AnchorRegistry
+from repro.core.types import ExecReport, PeerRecord, PeerTable, RegistryState
 
 _M64 = (1 << 64) - 1
 

@@ -14,9 +14,10 @@ from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.rwkv6_chunk import wkv6_chunked as _wkv6_pallas
 from repro.kernels.ssd_chunk import ssd_chunked as _ssd_pallas
-from repro.kernels.tropical_route import tropical_route as _tropical_pallas
-from repro.kernels.tropical_route import \
-    tropical_route_kbest as _tropical_kbest_pallas
+from repro.kernels.tropical_route import (
+    tropical_route as _tropical_pallas,
+    tropical_route_kbest as _tropical_kbest_pallas,
+)
 
 
 def on_tpu() -> bool:

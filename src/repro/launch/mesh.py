@@ -6,7 +6,6 @@ dryrun.py (which sets XLA_FLAGS first) sees its 512 placeholders.
 """
 from __future__ import annotations
 
-
 import jax
 
 from repro.configs.base import MeshConfig

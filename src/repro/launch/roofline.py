@@ -21,7 +21,7 @@ against HLO FLOPs exposes remat/dispatch waste.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, asdict
+from dataclasses import asdict, dataclass
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig

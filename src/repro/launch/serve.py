@@ -43,6 +43,28 @@ def main(argv=None):
     ap.add_argument("--hedged", action="store_true",
                     help="hedged window serving: fire a backup hop when a "
                          "primary exceeds its latency-quantile trigger")
+    ap.add_argument("--gossip", action="store_true",
+                    help="route from a gossip-synced seeker cache "
+                         "(repro.sync): anchors push per-shard version "
+                         "vectors, the seeker pulls delta-encoded dirty "
+                         "shards, and routing prices staleness instead of "
+                         "reading in-process snapshots")
+    ap.add_argument("--gossip-period", type=float, default=None,
+                    metavar="S",
+                    help="gossip round period in seconds "
+                         "(default: T_gossip from GTRACConfig)")
+    ap.add_argument("--gossip-fanout", type=int, default=2,
+                    help="max dirty shards a seeker pulls per round "
+                         "(the rest defer — bandwidth cap)")
+    ap.add_argument("--gossip-stale-margin", type=float, default=0.0,
+                    metavar="M",
+                    help="trust docked per stale gossip round (an "
+                         "inflated trust floor for shards the seeker "
+                         "cannot confirm; 0 disables)")
+    ap.add_argument("--gossip-stale-decay", type=float, default=0.0,
+                    metavar="R",
+                    help="seeker-side trust discount toward init_trust, "
+                         "per second of shard staleness (0 disables)")
     args = ap.parse_args(argv)
     if args.windowed and args.algorithm != "gtrac":
         ap.error("--windowed routes via the gtrac batch router; "
@@ -51,6 +73,9 @@ def main(argv=None):
         ap.error("--hedged is a window-serving feature (run_queue); "
                  "add --windowed — the per-token generate() path does "
                  "not hedge")
+    if args.algorithm != "gtrac" and args.gossip:
+        ap.error("--gossip serves from the trust-aware seeker cache; "
+                 "--algorithm %s does not consume it" % args.algorithm)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -70,8 +95,16 @@ def main(argv=None):
             print(f"req {r.request_id}: {list(r.prompt)} -> {r.output}")
         return
 
+    gossip_kw = {}
+    if args.gossip_period is not None:
+        gossip_kw["gossip_period_s"] = args.gossip_period
     gcfg = GTRACConfig(anchor_shards=args.shards, shard_by=args.shard_by,
-                       hedge_enabled=args.hedged)
+                       hedge_enabled=args.hedged,
+                       gossip_enabled=args.gossip,
+                       gossip_fanout=args.gossip_fanout,
+                       gossip_stale_margin=args.gossip_stale_margin,
+                       gossip_stale_decay=args.gossip_stale_decay,
+                       **gossip_kw)
     srv = GTRACPipelineServer(cfg, params,
                               layers_per_stage=args.layers_per_stage,
                               algorithm=args.algorithm, seed=args.seed,
@@ -94,6 +127,13 @@ def main(argv=None):
               f"batched DP calls: {s.device_calls} "
               f"(vs {s.requests} per-token solves)  "
               f"anchor shards: {args.shards}  hedges fired: {hedges}")
+        if srv.gossip is not None:
+            g = srv.gossip.stats
+            stale = max((r.metrics.stale_rounds_max for r in done),
+                        default=0)
+            print(f"gossip: {g.rounds} rounds, {g.deltas} deltas "
+                  f"({g.delta_bytes} B), {g.full_syncs} full syncs "
+                  f"({g.full_bytes} B), max staleness {stale} rounds")
         return
     ok = 0
     for rid in range(args.requests):

@@ -16,12 +16,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn
-from repro.models import moe as moe_mod
-from repro.models.common import (Params, adtype, apply_norm,
-                                 chunked_cross_entropy, cross_entropy_loss,
-                                 embed_tokens, init_embeddings, init_norm,
-                                 logits_head, scan_or_unroll, split_keys)
+from repro.models import attention as attn, moe as moe_mod
+from repro.models.common import (
+    Params,
+    adtype,
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy_loss,
+    embed_tokens,
+    init_embeddings,
+    init_norm,
+    logits_head,
+    scan_or_unroll,
+    split_keys,
+)
 from repro.models.mlp import apply_mlp, init_mlp
 from repro.models.rope import apply_rotary, positional_angles
 

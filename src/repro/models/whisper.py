@@ -13,11 +13,21 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
-from repro.models.common import (Params, adtype, apply_norm,
-                                 chunked_cross_entropy, cross_entropy_loss,
-                                 dense_init, embed_tokens, init_embeddings,
-                                 init_norm, logits_head, pdtype,
-                                 scan_or_unroll, split_keys)
+from repro.models.common import (
+    Params,
+    adtype,
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy_loss,
+    dense_init,
+    embed_tokens,
+    init_embeddings,
+    init_norm,
+    logits_head,
+    pdtype,
+    scan_or_unroll,
+    split_keys,
+)
 from repro.models.mlp import apply_mlp, init_mlp
 
 

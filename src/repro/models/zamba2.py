@@ -16,15 +16,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn
-from repro.models import mamba2 as m2
-from repro.models.common import (Params, adtype, apply_norm,
-                                 chunked_cross_entropy,
-                                 cross_entropy_loss, embed_tokens,
-                                 init_embeddings, init_norm,
-                                 logits_head, scan_or_unroll)
+from repro.models import attention as attn, mamba2 as m2
+from repro.models.common import (
+    Params,
+    adtype,
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy_loss,
+    embed_tokens,
+    init_embeddings,
+    init_norm,
+    logits_head,
+    scan_or_unroll,
+)
 from repro.models.mlp import apply_mlp, init_mlp
-from repro.models.rope import positional_angles, apply_rotary
+from repro.models.rope import apply_rotary, positional_angles
 
 
 def n_groups(cfg: ModelConfig) -> int:

@@ -37,6 +37,7 @@ from repro.serving.batch_router import BatchRouter
 from repro.serving.engine import AdmissionQueue, Request
 from repro.sim.peers import PROFILES, SimPeer, make_peer
 from repro.sim.testbed import Testbed
+from repro.sync.gossip import make_sync_plane
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +94,9 @@ class ServeMetrics:
     # mirrored from the stream's HedgedChainExecutor after every window
     hedges_fired: int = 0
     hedges_won: int = 0
+    # gossip serving (cfg.gossip_enabled): worst per-shard seeker-cache
+    # staleness (in gossip rounds) seen while this stream was active
+    stale_rounds_max: int = 0
 
 
 @dataclass
@@ -144,6 +148,15 @@ class GTRACPipelineServer:
         self.bed = Testbed(cfg=self.gcfg, total_layers=cfg.num_layers,
                            peers=peers, anchor=anchor, rng=rng)
         self.seeker = SeekerCache(anchor, self.gcfg, now=0.0)
+        # gossip sync plane (cfg.gossip_enabled): routing reads a
+        # delta-synced shard-mirror cache (repro.sync) instead of the
+        # in-process snapshot; staleness-bounded routing_view discounts
+        # trust on shards the seeker cannot confirm
+        self.gossip = None
+        self.sync_seeker = None
+        if self.gcfg.gossip_enabled:
+            _, (self.sync_seeker,), self.gossip = make_sync_plane(
+                anchor, self.gcfg, n_seekers=1, now=0.0)
         # per-server planner: compiled CSR graph + K-best plans are reused
         # across every token routed from an unchanged registry snapshot
         self.planner = RoutePlanner(cfg.num_layers,
@@ -177,6 +190,21 @@ class GTRACPipelineServer:
 
         return hop
 
+    # -- route-table source ----------------------------------------------------
+
+    def _sync_and_view(self):
+        """Background sync tick + the table routing consumes this window:
+        the gossip seeker's staleness-bounded ``routing_view`` when the
+        sync plane is on, the classic in-process snapshot cache
+        otherwise. Never a synchronous registry read on the request
+        path either way."""
+        now = self.bed.now
+        if self.gossip is not None:
+            self.gossip.maybe_tick(now)
+            return self.sync_seeker.routing_view(now)
+        self.seeker.maybe_sync(now)
+        return self.seeker.view()
+
     # -- serving ---------------------------------------------------------------
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
@@ -188,8 +216,7 @@ class GTRACPipelineServer:
         executor = ChainExecutor(self.gcfg, self._hop_fn(request_id))
 
         for _ in range(max_new_tokens):
-            self.seeker.maybe_sync(self.bed.now)
-            table = self.seeker.view()
+            table = self._sync_and_view()
             plan = None
             if self.algorithm == "gtrac":
                 # planner path: K-best plan cached per snapshot version
@@ -270,10 +297,13 @@ class GTRACPipelineServer:
                 now=self.bed.now)
             active += admitted
             served += admitted
-            self.seeker.maybe_sync(self.bed.now)
-            table = self.seeker.view()
+            table = self._sync_and_view()
+            stale_rounds = (int(self.sync_seeker.staleness_rounds(
+                self.bed.now).max()) if self.sync_seeker is not None else 0)
             for req in active:
                 self.router.submit(req.request_id, req.tau)
+                req.metrics.stale_rounds_max = max(
+                    req.metrics.stale_rounds_max, stale_rounds)
             plans = self.router.route_window(table)   # ONE batched DP
             window_ms = 0.0
             for req in active:

@@ -14,13 +14,12 @@ becomes unreachable for a time window).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.sharding import Registry, ShardedAnchorRegistry, \
-    make_registry
+from repro.core.sharding import Registry, ShardedAnchorRegistry, make_registry
 from repro.sim.peers import PROFILES, SimPeer, make_peer
 
 GPT2_LARGE_LAYERS = 36
@@ -155,6 +154,70 @@ def run_churn(bed: Testbed, windows: int = 10, window_s: float = 2.0,
         prev = table
         stats.windows += 1
     stats.final_peers = len(bed.anchor.snapshot(bed.now))
+    return stats
+
+
+@dataclass
+class PartitionStats:
+    """Outcome of ``simulate_partition``: what a seeker-side partition
+    did to the sync plane."""
+
+    partition_windows: int = 0
+    max_stale_rounds: int = 0      # worst per-shard staleness while cut off
+    rounds_to_convergence: int = -1   # gossip rounds after heal (-1: never)
+    converged: bool = False
+    delta_bytes: int = 0           # wire bytes shipped during reconciliation
+    full_bytes: int = 0
+    gap_repairs: int = 0           # DeltaGapErrors repaired by anti-entropy
+
+
+def simulate_partition(bed: Testbed, sched, seeker,
+                       shards: Sequence[int],
+                       partition_windows: int = 5, window_s: float = 2.0,
+                       max_heal_rounds: int = 32,
+                       mutate: Optional[Callable[[Testbed], None]] = None,
+                       ) -> PartitionStats:
+    """Partition a gossip seeker from a subset of anchor shards, keep the
+    world moving, heal, and drive gossip until the seeker reconverges.
+
+    Each partitioned window: ``mutate(bed)`` (optional churn — reports,
+    crashes, registrations), advance the sim clock, sweep the anchor,
+    and run a gossip round (reachable shards keep syncing; the cut-off
+    shards' staleness grows — staleness-bounded routing territory).
+    After ``heal`` the loop ticks until ``sched.converged`` confirms the
+    seeker mirrors the anchor's version vector AND its materialized
+    table matches the composed snapshot column-for-column, counting the
+    rounds reconciliation took. ``sched``/``seeker`` are a
+    ``repro.sync.gossip.GossipScheduler`` and its ``SeekerCache``
+    (duck-typed to keep sim free of a hard sync-plane import)."""
+    stats = PartitionStats(partition_windows=partition_windows)
+    b0 = (sched.stats.delta_bytes, sched.stats.full_bytes,
+          sched.stats.gap_repairs)
+    sched.partition(seeker, shards)
+    for _ in range(partition_windows):
+        if mutate is not None:
+            mutate(bed)
+        bed.advance(window_s)
+        bed.anchor.sweep(bed.now)
+        sched.tick(bed.now)
+        stats.max_stale_rounds = max(
+            stats.max_stale_rounds,
+            int(seeker.staleness_rounds(bed.now).max()))
+    sched.heal(seeker, shards)
+    for r in range(max_heal_rounds):
+        if sched.converged(seeker, bed.now):
+            stats.rounds_to_convergence = r
+            stats.converged = True
+            break
+        bed.advance(window_s)
+        sched.tick(bed.now)
+    else:
+        stats.converged = sched.converged(seeker, bed.now)
+        if stats.converged:
+            stats.rounds_to_convergence = max_heal_rounds
+    stats.delta_bytes = sched.stats.delta_bytes - b0[0]
+    stats.full_bytes = sched.stats.full_bytes - b0[1]
+    stats.gap_repairs = sched.stats.gap_repairs - b0[2]
     return stats
 
 

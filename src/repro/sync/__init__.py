@@ -1,0 +1,38 @@
+"""Gossip sync plane: delta-encoded trust dissemination from anchors to
+edge seeker caches, with staleness-bounded routing under partitions.
+
+The third plane of the system — data (serving), control (registries),
+and now dissemination: ``delta`` is the wire format (per-shard columnar
+diffs + full-snapshot fallback), ``seeker`` the edge-side shard mirrors
+that materialize bit-identical route tables, ``gossip`` the round
+scheduler (version-vector push, fanout-capped dirty-shard pull,
+anti-entropy full sync after partition heal).
+"""
+from repro.sync.delta import (
+    DeltaGapError,
+    ShardDelta,
+    apply_delta,
+    empty_state,
+    full_delta,
+    make_delta,
+    slice_state,
+    state_wire_bytes,
+)
+from repro.sync.gossip import (
+    GossipPublisher,
+    GossipScheduler,
+    GossipStats,
+    make_sync_plane,
+    registry_n_shards,
+    registry_shard_state,
+    registry_version_vector,
+)
+from repro.sync.seeker import SeekerCache, SeekerSyncStats
+
+__all__ = [
+    "DeltaGapError", "ShardDelta", "apply_delta", "empty_state",
+    "full_delta", "make_delta", "slice_state", "state_wire_bytes",
+    "GossipPublisher", "GossipScheduler", "GossipStats",
+    "make_sync_plane", "registry_n_shards", "registry_shard_state",
+    "registry_version_vector", "SeekerCache", "SeekerSyncStats",
+]

@@ -1,0 +1,318 @@
+"""Gossip scheduler: anchors push version vectors, seekers pull dirty
+shards, anti-entropy repairs partitions.
+
+``GossipPublisher`` is the anchor-side sync endpoint over any registry
+(monolithic ``AnchorRegistry`` = one shard; ``ShardedAnchorRegistry`` =
+its shard set). Every pull exports the owning shard's columnar state
+fresh (zero-copy except the heartbeat column) and retains a bounded
+history of past per-shard states keyed by version, so a seeker's pull is
+delta-encoded against exactly the version it mirrors; seekers whose base
+has aged out of the history get a full shard snapshot instead.
+
+``GossipScheduler`` drives rounds on the ``gossip_period_s`` cadence:
+
+* **push** — each round every seeker observes the publisher's per-shard
+  version vector (clean shards refresh their staleness clock for free);
+* **pull** — each seeker pulls at most ``gossip_fanout`` *dirty* shards,
+  stalest first (the rest defer to later rounds — the bandwidth cap);
+* **partition** — ``partition(seeker, shards)`` makes a subset of anchor
+  shards unreachable for one seeker: no pushes, no pulls, staleness
+  grows, and staleness-bounded routing (sync/seeker.py) takes over;
+* **anti-entropy** — ``full_sync`` ships whole shard snapshots (boot,
+  partition heal, or a ``DeltaGapError`` on a version gap), after which
+  the seeker is bit-identical to the anchor again (``converged``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import GTRACConfig
+from repro.core.sharding import ShardedAnchorRegistry
+from repro.core.types import RegistryState
+from repro.sync.delta import HEADER_BYTES, DeltaGapError, ShardDelta, full_delta, make_delta
+from repro.sync.seeker import SeekerCache
+
+
+def registry_n_shards(registry) -> int:
+    """Shard count of any registry (monolithic = 1)."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        return registry.n_shards
+    return 1
+
+
+def registry_version_vector(registry) -> Tuple[int, ...]:
+    """Per-shard version vector of any registry (monolithic = 1-vector)."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        return registry.version_vector
+    return (registry.version,)
+
+
+def registry_shard_state(registry, shard: int) -> RegistryState:
+    """One shard's columnar state with its seq column (monolithic:
+    the whole registry is shard 0)."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        return registry.export_shard_state(shard)
+    if shard != 0:
+        raise ValueError(f"monolithic registry has only shard 0, "
+                         f"got {shard}")
+    return registry.export_state()
+
+
+def registry_shard_heartbeats(registry, shard: int) -> np.ndarray:
+    """One shard's fresh liveness column (the hb-refresh payload)."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        return registry.export_shard_heartbeats(shard)
+    return registry.export_heartbeats()
+
+
+def registry_poke_liveness(registry, now: float) -> None:
+    """Fold liveness flips into the version vector: heartbeat EXPIRY (or
+    revival) only bumps a shard's version when its snapshot is taken —
+    take each shard's zero-copy snapshot so a peer going TTL-dead at the
+    anchor becomes a version bump the gossip push can advertise. O(#P)
+    vectorized compare per round, the same cost as the composed-snapshot
+    fast path."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        for sh in registry.shards:
+            sh.snapshot(now)
+    else:
+        registry.snapshot(now)
+
+
+@dataclass
+class GossipStats:
+    rounds: int = 0
+    pushes: int = 0           # version-vector pushes delivered to seekers
+    deltas: int = 0           # delta messages shipped
+    delta_bytes: int = 0
+    full_syncs: int = 0       # anti-entropy full shard snapshots shipped
+    full_bytes: int = 0
+    deferred: int = 0         # dirty shards past the fanout cap, deferred
+    gap_repairs: int = 0      # DeltaGapErrors repaired by full sync
+    hb_refreshes: int = 0     # heartbeat-column lease renewals accepted
+    hb_bytes: int = 0
+    hb_refresh_dropped: int = 0   # renewals the seeker could not take
+
+
+class GossipPublisher:
+    """Anchor-side per-shard state keeper + delta source."""
+
+    def __init__(self, registry, cfg: Optional[GTRACConfig] = None):
+        self.registry = registry
+        self.cfg = cfg or registry.cfg
+        self.n_shards = registry_n_shards(registry)
+        self.history_size = max(1, int(self.cfg.gossip_history))
+        # per-shard bounded history of exported states keyed by version —
+        # the delta bases for seekers mirroring past versions
+        self._history: List["OrderedDict[int, RegistryState]"] = [
+            OrderedDict() for _ in range(self.n_shards)]
+
+    def version_vector(self) -> Tuple[int, ...]:
+        return registry_version_vector(self.registry)
+
+    def shard_state(self, shard: int) -> Tuple[int, RegistryState]:
+        """Fresh export of one shard (recorded into the delta history)."""
+        version = self.version_vector()[shard]
+        state = registry_shard_state(self.registry, shard)
+        hist = self._history[shard]
+        # replace any earlier capture at this version: same rows, fresher
+        # heartbeat column
+        hist[version] = state
+        hist.move_to_end(version)
+        while len(hist) > self.history_size:
+            hist.popitem(last=False)
+        return version, state
+
+    def pull(self, shard: int, have_version: int) -> ShardDelta:
+        """A seeker's pull: delta from the version it mirrors to the
+        current shard state, or a full snapshot when that base has aged
+        out of the history (anti-entropy)."""
+        version, state = self.shard_state(shard)
+        base = self._history[shard].get(have_version) \
+            if have_version != version else state
+        if have_version == version or base is None:
+            # up to date (shouldn't normally be pulled) or base unknown:
+            # ship the whole shard
+            return full_delta(state, shard=shard, new_version=version)
+        return make_delta(base, state, shard=shard,
+                          base_version=have_version, new_version=version)
+
+    def full(self, shard: int) -> ShardDelta:
+        """The anti-entropy message: one whole shard snapshot."""
+        version, state = self.shard_state(shard)
+        return full_delta(state, shard=shard, new_version=version)
+
+    def heartbeats(self, shard: int) -> np.ndarray:
+        """One shard's fresh liveness column — the hb-refresh payload
+        (8 bytes/peer; never touches versions, exactly like live
+        heartbeat traffic)."""
+        return registry_shard_heartbeats(self.registry, shard)
+
+
+class GossipScheduler:
+    """Round-driver between one publisher and its subscribed seekers."""
+
+    def __init__(self, publisher: GossipPublisher,
+                 seekers: Sequence[SeekerCache],
+                 cfg: Optional[GTRACConfig] = None,
+                 fanout: Optional[int] = None,
+                 period_s: Optional[float] = None):
+        self.publisher = publisher
+        self.seekers: List[SeekerCache] = list(seekers)
+        cfg = cfg or publisher.cfg
+        self.fanout = int(cfg.gossip_fanout if fanout is None else fanout)
+        self.period_s = float(cfg.gossip_period_s if period_s is None
+                              else period_s)
+        self._last_round: Optional[float] = None
+        self._blocked: Dict[int, Set[int]] = {}   # id(seeker) -> shard set
+        self.stats = GossipStats()
+
+    # -- partition control ---------------------------------------------------
+
+    def partition(self, seeker: SeekerCache,
+                  shards: Optional[Sequence[int]] = None) -> None:
+        """Cut one seeker off from a subset of anchor shards (default:
+        all of them). Blocked shards get no pushes and no pulls until
+        ``heal`` — their staleness grows every round."""
+        all_shards = range(self.publisher.n_shards)
+        add = set(all_shards) if shards is None else set(shards)
+        self._blocked.setdefault(id(seeker), set()).update(add)
+
+    def heal(self, seeker: SeekerCache,
+             shards: Optional[Sequence[int]] = None) -> None:
+        """Restore reachability (default: fully). Reconciliation happens
+        on the following rounds: pulls for shards whose base version is
+        still in the publisher's history, anti-entropy full syncs for
+        the rest."""
+        blocked = self._blocked.get(id(seeker))
+        if blocked is None:
+            return
+        blocked -= set(range(self.publisher.n_shards)) \
+            if shards is None else set(shards)
+        if not blocked:
+            self._blocked.pop(id(seeker), None)
+
+    def blocked_shards(self, seeker: SeekerCache) -> Set[int]:
+        return set(self._blocked.get(id(seeker), set()))
+
+    # -- rounds --------------------------------------------------------------
+
+    def maybe_tick(self, now: float) -> bool:
+        """Run a round iff ``gossip_period_s`` elapsed since the last."""
+        if self._last_round is not None and \
+                now - self._last_round < self.period_s:
+            return False
+        self.tick(now)
+        return True
+
+    def tick(self, now: float) -> None:
+        """One gossip round: fold anchor-side liveness flips into the
+        version vector, push it to every seeker, let each pull its
+        dirtiest reachable shards (fanout-capped), then renew aging
+        heartbeat-column leases (``gossip_hb_refresh_frac``)."""
+        self._last_round = now
+        self.stats.rounds += 1
+        registry_poke_liveness(self.publisher.registry, now)
+        vv = self.publisher.version_vector()
+        n = self.publisher.n_shards
+        cfg = self.publisher.cfg
+        refresh_s = cfg.gossip_hb_refresh_frac * cfg.node_ttl_s
+        for seeker in self.seekers:
+            blocked = self._blocked.get(id(seeker), ())
+            if len(blocked) >= n:
+                continue          # fully partitioned: no push reaches it
+            reachable = [s not in blocked for s in range(n)]
+            dirty = seeker.observe(vv, now, reachable=reachable)
+            self.stats.pushes += 1
+            ages = seeker.staleness(now)
+            dirty.sort(key=lambda s: -ages[s])    # stalest first
+            take, defer = dirty[:self.fanout], dirty[self.fanout:]
+            self.stats.deferred += len(defer)
+            for s in take:
+                self._ship(seeker, s, now)
+            if refresh_s <= 0:
+                continue
+            hb_ages = seeker.hb_age(now)
+            behind = set(defer)    # deferred data: membership may lag,
+            for s in range(n):     # a refresh would only bounce — skip
+                if reachable[s] and s not in behind \
+                        and hb_ages[s] >= refresh_s:
+                    hb = self.publisher.heartbeats(s)
+                    if seeker.refresh_heartbeats(s, hb, now):
+                        self.stats.hb_refreshes += 1
+                        self.stats.hb_bytes += int(hb.nbytes) + \
+                            HEADER_BYTES
+                    else:
+                        self.stats.hb_refresh_dropped += 1
+
+    def _ship(self, seeker: SeekerCache, shard: int, now: float) -> None:
+        delta = self.publisher.pull(shard, seeker.version_vector[shard])
+        try:
+            seeker.apply(delta, now)
+        except DeltaGapError:
+            # version gap (history aged out mid-flight): anti-entropy
+            delta = self.publisher.full(shard)
+            seeker.apply(delta, now)
+            self.stats.gap_repairs += 1
+        if delta.is_full:
+            self.stats.full_syncs += 1
+            self.stats.full_bytes += delta.wire_bytes()
+        else:
+            self.stats.deltas += 1
+            self.stats.delta_bytes += delta.wire_bytes()
+
+    # -- anti-entropy --------------------------------------------------------
+
+    def full_sync(self, seeker: SeekerCache, now: float,
+                  shards: Optional[Sequence[int]] = None) -> int:
+        """Ship whole shard snapshots (boot sync / partition-heal
+        reconciliation). Returns total wire bytes shipped."""
+        total = 0
+        for s in (range(self.publisher.n_shards) if shards is None
+                  else shards):
+            delta = self.publisher.full(s)
+            seeker.apply(delta, now)
+            self.stats.full_syncs += 1
+            total += delta.wire_bytes()
+        self.stats.full_bytes += total
+        return total
+
+    # -- convergence ---------------------------------------------------------
+
+    def converged(self, seeker: SeekerCache, now: float,
+                  check_table: bool = True) -> bool:
+        """A seeker is converged when it mirrors the anchor's version
+        vector and (optionally) its materialized table matches the
+        anchor's composed snapshot column-for-column."""
+        if seeker.version_vector != self.publisher.version_vector():
+            return False
+        if not check_table:
+            return True
+        ts = seeker.materialize(now)
+        ta = self.publisher.registry.snapshot(now)
+        return (np.array_equal(ta.peer_ids, ts.peer_ids)
+                and np.array_equal(ta.trust, ts.trust)
+                and np.array_equal(ta.latency_ms, ts.latency_ms)
+                and np.array_equal(ta.alive, ts.alive))
+
+
+def make_sync_plane(registry, cfg: Optional[GTRACConfig] = None,
+                    n_seekers: int = 1, now: float = 0.0,
+                    boot_sync: bool = True)\
+        -> Tuple[GossipPublisher, List[SeekerCache], GossipScheduler]:
+    """Wire a publisher + N seeker caches + scheduler over one registry
+    (the serving/sim/bench entry point). ``boot_sync`` anti-entropies
+    every seeker so they start bit-identical to the anchor."""
+    cfg = cfg or registry.cfg
+    pub = GossipPublisher(registry, cfg)
+    seekers = [SeekerCache(cfg, pub.n_shards, now=now)
+               for _ in range(n_seekers)]
+    sched = GossipScheduler(pub, seekers, cfg=cfg)
+    if boot_sync:
+        for sk in seekers:
+            sched.full_sync(sk, now)
+    return pub, seekers, sched

@@ -11,9 +11,13 @@ import pytest
 
 from repro.core.executor import ChainExecutor
 from repro.core.planner import RoutePlanner
-from repro.core.routing_jax import (backtrack_kbest, effective_costs,
-                                    layered_dp_kbest, route_batched,
-                                    route_batched_kbest)
+from repro.core.routing_jax import (
+    backtrack_kbest,
+    effective_costs,
+    layered_dp_kbest,
+    route_batched,
+    route_batched_kbest,
+)
 from repro.kernels import ref
 from repro.kernels.tropical_route import tropical_route, tropical_route_kbest
 from repro.serving.batch_router import plan_batched

@@ -10,8 +10,14 @@ precomputed plan without a fresh search.
 import numpy as np
 import pytest
 
-from repro.core import (AnchorRegistry, ChainExecutor, brute_force_route,
-                        gtrac_route, heap_dijkstra_route, plan_route)
+from repro.core import (
+    AnchorRegistry,
+    ChainExecutor,
+    brute_force_route,
+    gtrac_route,
+    heap_dijkstra_route,
+    plan_route,
+)
 from repro.core.hedging import HedgedChainExecutor
 from repro.core.planner import RoutePlanner, compile_table
 from repro.core.routing import _dijkstra_layered, enumerate_chains

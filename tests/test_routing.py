@@ -2,14 +2,23 @@
 risk-bound properties (hypothesis)."""
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
-from repro.core import (brute_force_route, gtrac_route, k_max, larac_route,
-                        mr_route, naive_route, risk_bound, sp_route,
-                        trust_floor_for, verify_design_guarantee)
+from repro.core import (
+    brute_force_route,
+    gtrac_route,
+    k_max,
+    larac_route,
+    mr_route,
+    naive_route,
+    risk_bound,
+    sp_route,
+    trust_floor_for,
+    verify_design_guarantee,
+)
 from repro.core.routing import enumerate_chains
 from repro.core.routing_jax import route_batched
 
+from _hyp import given, settings, st
 from conftest import build_layered_anchor
 
 

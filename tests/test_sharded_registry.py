@@ -7,8 +7,7 @@ from repro.configs.base import GTRACConfig
 from repro.core.failover import ReplicatedAnchor
 from repro.core.planner import RoutePlanner, plan_route
 from repro.core.registry import AnchorRegistry
-from repro.core.sharding import (ShardedAnchorRegistry, make_registry,
-                                 stable_peer_hash)
+from repro.core.sharding import ShardedAnchorRegistry, make_registry, stable_peer_hash
 from repro.core.types import ExecReport, HopReport
 
 L = 12
@@ -373,3 +372,56 @@ class TestChurn:
         pids = bed.crash_anchor_shard(1)
         assert pids and all(bed.anchor.owner_of(p) == 1 for p in pids)
         assert all(not bed.peers[p].alive for p in pids)
+
+
+# ---------------------------------------------------------------------------
+# Version-bump contract (the signal the gossip sync plane keys on)
+# ---------------------------------------------------------------------------
+
+# (name, mutator(reg, now), bumps): every mutating registry API must bump
+# `version` (monolithic) / the per-shard version vector (sharded), and
+# every no-op path must leave it untouched — otherwise delta gossip either
+# misses updates or re-ships clean shards forever.
+VERSION_MUTATORS = [
+    ("set_trust", lambda r, now: r.set_trust(0, 0.42), True),
+    ("set_trust_unknown", lambda r, now: r.set_trust(9_999, 0.42), False),
+    ("reset_trust", lambda r, now: r.reset_trust(), True),
+    ("apply_report_success",
+     lambda r, now: r.apply_report(ExecReport(
+         True, [0, 5], [HopReport(p, 40.0, True) for p in (0, 5)])), True),
+    ("apply_report_failure",
+     lambda r, now: r.apply_report(ExecReport(
+         False, [3], [HopReport(3, 200.0, False)], failed_peer=3)), True),
+    ("apply_report_unknown_peers",
+     lambda r, now: r.apply_report(ExecReport(
+         True, [9_999], [HopReport(9_999, 40.0, True)])), False),
+    ("sweep_expiring",
+     lambda r, now: r.sweep(now + 100.0, expire_after_s=50.0), True),
+    ("sweep_decaying",
+     lambda r, now: r.sweep(now + 1.0, decay_rate=0.5), True),
+    ("sweep_clean", lambda r, now: r.sweep(now + 1.0), False),
+    ("deregister", lambda r, now: r.deregister(1), True),
+    ("deregister_unknown", lambda r, now: r.deregister(9_999), False),
+    ("register_new", lambda r, now: r.register(500, 0, 3, now=now), True),
+    ("heartbeat", lambda r, now: r.heartbeat(0, now + 0.1), False),
+]
+
+
+class TestVersionBumpContract:
+    @pytest.mark.parametrize("shards", [1, 4])
+    @pytest.mark.parametrize(
+        "name,mutate,bumps", VERSION_MUTATORS,
+        ids=[m[0] for m in VERSION_MUTATORS])
+    def test_mutators_bump_versions_noops_do_not(self, gcfg, shards,
+                                                 name, mutate, bumps):
+        from repro.sync.gossip import registry_version_vector
+        reg = make_registry(gcfg, shards=shards)
+        populate(reg)
+        now = 5.0
+        reg.heartbeat_all(range(48), now)
+        before = registry_version_vector(reg)
+        mutate(reg, now)
+        after = registry_version_vector(reg)
+        assert (after != before) == bumps, \
+            f"{name}: version vector {before} -> {after}, " \
+            f"expected {'a bump' if bumps else 'no change'}"

@@ -2,13 +2,13 @@
 staleness, and the jitted JAX twin."""
 import jax.numpy as jnp
 import pytest
-from _hyp import given, settings, st
 
 from repro.configs.base import GTRACConfig
 from repro.core import AnchorRegistry, SeekerCache
-from repro.core.trust import (effective_cost, ewma_latency, jax_apply_report,
-                              penalize, reward)
+from repro.core.trust import effective_cost, ewma_latency, jax_apply_report, penalize, reward
 from repro.core.types import ExecReport, HopReport
+
+from _hyp import given, settings, st
 
 
 class TestRules:
