@@ -8,8 +8,12 @@
 #                        <= 2x monolithic at S=16; parity always asserted)
 #   make bench-sync     gossip sync plane -> BENCH_sync.json
 #                       (FAILS unless single-report delta wire bytes
-#                        <= 10% of the full snapshot at N=1000; seeker
-#                        parity + post-heal convergence always asserted)
+#                        <= 10% of the full snapshot at N=1000 AND the
+#                        relay lane's anchor bytes/round at 64 relay
+#                        seekers <= the 8-seeker direct-push cost;
+#                        seeker parity, post-heal convergence, and the
+#                        ceil(log2 N)+2 relay convergence bound always
+#                        asserted — --quick included)
 #   make bench-smoke    CI smoke lane: all four benches in --quick mode
 #                       (tiny N/R, perf gates skipped; writes
 #                        BENCH_*.quick.json, never the tracked JSONs)

@@ -1,28 +1,36 @@
-"""Gossip sync plane: delta wire cost, sync-path latency, and
-rounds-to-convergence under churn + partition heal.
+"""Gossip sync plane: delta wire cost, sync-path latency,
+rounds-to-convergence under churn + partition heal, and the epidemic
+relay lane.
 
 What the dissemination plane buys (and what it must not cost):
 
 * **Delta wire bytes** — a steady-state trust update (one execution
   report) touches a handful of rows in a handful of shards; shipping it
   to a seeker must cost a small fraction of re-shipping the registry.
-  The PR's acceptance gate: single-report delta bytes <= 10% of the
+  The PR-4 acceptance gate: single-report delta bytes <= 10% of the
   full-snapshot bytes at N=1000 (measured via ``ShardDelta.wire_bytes``
   against ``state_wire_bytes`` of every shard).
 * **Parity** — a fully-synced ``SeekerCache`` must route bit-identically
   to the anchor-composed snapshot (asserted inline for S ∈ {1, 4, 16},
-  every run, quick or not).
+  every run, quick or not; re-asserted on relay-converged seekers).
 * **Convergence** — after windows of churn while partitioned from half
   the shards, a healed seeker must reconverge (version vector + table
   columns) within a bounded number of gossip rounds; asserted every run.
+* **Relay lane** (PR 5, gated) — with ``relay_enabled`` at 64 seekers
+  (S=16, fanout 4) the anchor pays for gossip_fanout seed pushes per
+  round, so its wire bytes/round must stay <= the 8-seeker direct-push
+  cost (and flat in the seeker count), while every seeker converges
+  within ceil(log2 N) + 2 relay rounds of a burst of churn — the
+  convergence bound and parity are asserted every run, quick included.
 
 Emits BENCH_sync.json via benchmarks/common. Run with --quick for the CI
-smoke lane (tiny N, perf gate skipped; parity/convergence still
+smoke lane (tiny N, perf gates skipped; parity/convergence still
 asserted).
 """
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 
@@ -40,6 +48,8 @@ from repro.sync.gossip import make_sync_plane, registry_shard_state
 SHARDS = (1, 4, 16)
 GATE_S = 16
 GATE_FRAC = 0.10
+RELAY_FANOUT = 4
+DIRECT_BASELINE_SEEKERS = 8
 
 
 def _per_call_us(fn, reps: int) -> float:
@@ -71,6 +81,109 @@ def assert_parity(bed, seeker, cfg: GTRACConfig, label: str,
     _, plan_s = plan_route(ts, bed.total_layers, cfg, tau=tau, planner=ps)
     assert plan_a.chain_rows == plan_s.chain_rows, f"{label} chains"
     assert plan_a.costs == plan_s.costs, f"{label} costs"
+
+
+def _relay_case(n_peers: int, n_seekers: int, shards: int, seed: int,
+                relay: bool, rounds_total: int, cfg_kw=None):
+    """One relay-lane measurement: boot a plane, apply a burst of churn,
+    drive exactly ``rounds_total`` gossip rounds (so anchor bytes/round
+    amortize hb-lease cycles identically across cases), and record the
+    first round at which every seeker was converged plus the ANCHOR's
+    wire bytes per round (deltas + fulls + hb leases)."""
+    cfg = GTRACConfig(gossip_fanout=RELAY_FANOUT,
+                      relay_enabled=relay, relay_fanout=RELAY_FANOUT,
+                      **(cfg_kw or {}))
+    bed = build_scaling_testbed(n_peers, cfg=cfg, seed=seed,
+                                shards=shards)
+    pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                          n_seekers=n_seekers,
+                                          now=bed.now)
+    rng = np.random.default_rng(seed)
+    pids = np.array(sorted(bed.peers), np.int64)
+    # burst of churn: trust reports across the shard space + joins
+    for _ in range(8):
+        chain = [int(p) for p in pids[rng.integers(0, len(pids), size=4)]]
+        bed.anchor.apply_report(ExecReport(
+            True, chain, [HopReport(p, 50.0, True) for p in chain]))
+    next_pid = int(pids.max()) + 1
+    for i in range(4):
+        bed.anchor.register(next_pid + i, 0, 3, now=bed.now,
+                            profile="golden")
+        bed.anchor.heartbeat(next_pid + i, bed.now)
+    bytes0 = sched.stats.anchor_bytes()      # boot full-syncs excluded
+    now, conv_round = bed.now, -1
+    for rnd in range(1, rounds_total + 1):
+        now += cfg.gossip_period_s
+        bed.anchor.heartbeat_all(list(bed.anchor.peers), now)
+        sched.tick(now)
+        if conv_round < 0 and sched.all_converged(now):
+            conv_round = rnd
+    converged = sched.all_converged(now, check_table=True)
+    per_round = (sched.stats.anchor_bytes() - bytes0) / rounds_total
+    return {"n_seekers": n_seekers, "relay": relay,
+            "rounds": conv_round, "converged": converged,
+            "anchor_bytes_per_round": round(per_round, 1),
+            "relay_msg_bytes": (sched.relay.stats.msg_bytes
+                                if sched.relay else 0),
+            "bed": bed, "seekers": seekers, "cfg": cfg}
+
+
+def relay_lane(n_peers: int, seed: int, quick: bool, results: dict):
+    """The gated epidemic lane: anchor bytes/round with 64 relay seekers
+    vs the 8-seeker direct-push baseline, plus the convergence bound and
+    post-convergence plan parity (asserted every run)."""
+    n_seekers = 16 if quick else 64
+    shards = 4 if quick else GATE_S
+    bound = math.ceil(math.log2(n_seekers)) + 2
+    r = _relay_case(n_peers, n_seekers, shards, seed, relay=True,
+                    rounds_total=bound)
+    assert r["converged"], "relay lane: seekers failed to converge"
+    assert 0 < r["rounds"] <= bound, \
+        (f"relay lane: {r['rounds']} rounds to convergence exceeds "
+         f"ceil(log2 {n_seekers}) + 2 = {bound}")
+    r["bound"] = bound
+    # parity re-asserted on relay-converged seekers (first + last)
+    for sk in (r["seekers"][0], r["seekers"][-1]):
+        assert_parity(r["bed"], sk, r["cfg"], f"relay{n_seekers}")
+    # flatness probe: a quarter of the seekers must cost the anchor
+    # about the same bytes/round (the relay plane's whole point) —
+    # measured over the SAME round window so lease cycles amortize
+    # identically
+    half = _relay_case(n_peers, max(2, n_seekers // 4), shards, seed,
+                       relay=True, rounds_total=bound)
+    assert half["converged"]
+    direct = _relay_case(n_peers, DIRECT_BASELINE_SEEKERS, shards, seed,
+                         relay=False, rounds_total=bound)
+    assert direct["converged"], "direct baseline failed to converge"
+    flat_ratio = (r["anchor_bytes_per_round"]
+                  / max(half["anchor_bytes_per_round"], 1.0))
+    gate_ok = (r["anchor_bytes_per_round"]
+               <= direct["anchor_bytes_per_round"])
+    emit(f"sync/relay/anchor_bytes_per_round/N{n_seekers}seekers",
+         r["anchor_bytes_per_round"],
+         f"{r['anchor_bytes_per_round']:.0f}B_vs_direct"
+         f"{DIRECT_BASELINE_SEEKERS}_"
+         f"{direct['anchor_bytes_per_round']:.0f}B")
+    emit(f"sync/relay/rounds_to_convergence/N{n_seekers}seekers",
+         float(r["rounds"]), f"{r['rounds']}rounds(bound{r['bound']})")
+    emit("sync/relay/flatness_vs_quarter_fleet", flat_ratio,
+         f"{flat_ratio:.2f}x_anchor_bytes_at_4x_seekers")
+    results["relay"] = {
+        "n_seekers": n_seekers, "shards": shards,
+        "fanout": RELAY_FANOUT,
+        "rounds_measured": bound,
+        "rounds_to_convergence": r["rounds"],
+        "convergence_bound": bound,
+        "anchor_bytes_per_round": r["anchor_bytes_per_round"],
+        "anchor_bytes_per_round_quarter_fleet":
+            half["anchor_bytes_per_round"],
+        "flatness_ratio": round(flat_ratio, 3),
+        "direct8_anchor_bytes_per_round":
+            direct["anchor_bytes_per_round"],
+        "relay_msg_bytes_total": r["relay_msg_bytes"],
+        "gate_anchor_le_direct8": bool(gate_ok),
+    }
+    return gate_ok
 
 
 def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
@@ -192,6 +305,10 @@ def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
         "reconcile_full_bytes": pstats.full_bytes,
     }
 
+    # -- relay lane (epidemic seeker→seeker; convergence bound + parity
+    #    asserted even in --quick, byte gate enforced on real runs) ----------
+    relay_ok = relay_lane(n_peers, seed, quick, results)
+
     # -- gate ---------------------------------------------------------------
     frac = results[f"S{GATE_S}"]["delta_frac"]
     gate_ok = frac <= GATE_FRAC
@@ -204,14 +321,24 @@ def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
              "converged_after_heal": True,
              "gate_enforced": not quick}
     if not quick:
-        # only the real (gated) measurement may claim the verdict key
+        # only the real (gated) measurement may claim the verdict keys
         extra["gate_delta_le_10pct"] = bool(gate_ok)
+        extra["gate_relay_anchor_le_direct8"] = bool(relay_ok)
     write_json("BENCH_sync.quick.json" if quick else "BENCH_sync.json",
                prefix="sync/", extra=extra)
-    if not gate_ok and not quick:
+    if not quick and not gate_ok:
         print(f"GATE FAILED: single-report delta {frac * 100:.2f}% of "
               f"full snapshot at S={GATE_S}, N={n_peers} "
               f"(need <= {GATE_FRAC * 100:.0f}%)", file=sys.stderr)
+        sys.exit(1)
+    if not quick and not relay_ok:
+        r = results["relay"]
+        print(f"GATE FAILED: relay anchor bytes/round "
+              f"{r['anchor_bytes_per_round']:.0f}B at "
+              f"{r['n_seekers']} seekers exceeds the "
+              f"{DIRECT_BASELINE_SEEKERS}-seeker direct-push cost "
+              f"{r['direct8_anchor_bytes_per_round']:.0f}B",
+              file=sys.stderr)
         sys.exit(1)
 
 

@@ -314,6 +314,23 @@ class GTRACConfig:
     gossip_stale_margin: float = 0.0
     gossip_stale_margin_max: float = 0.3
     gossip_stale_decay: float = 0.0
+    # seeker caches in the serving sync plane (gossip_enabled): routing
+    # reads seeker 0; the rest exist to carry the relay plane
+    gossip_seekers: int = 1
+    # epidemic seeker->seeker relay (sync/relay.py): with relay_enabled
+    # the anchor pushes only to gossip_fanout *seed* seekers per round
+    # (its per-round cost stays O(fanout), not O(seekers)) and every
+    # seeker then forwards its freshest per-shard delta chains to
+    # relay_fanout neighbors drawn by seeded k-regular random sampling
+    # (relay_seed), so updates reach all N seekers in O(log N) rounds.
+    # relay_history bounds the per-shard delta chain a seeker retains
+    # for forwarding; receivers behind the chain anti-entropy pull from
+    # the anchor when reachable, or adopt a neighbor's full shard
+    # mirror when not (the anchor stays the root of trust either way).
+    relay_enabled: bool = False
+    relay_fanout: int = 2
+    relay_history: int = 8
+    relay_seed: int = 0
 
 
 def asdict(cfg) -> dict:

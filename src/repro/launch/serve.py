@@ -65,6 +65,25 @@ def main(argv=None):
                     metavar="R",
                     help="seeker-side trust discount toward init_trust, "
                          "per second of shard staleness (0 disables)")
+    ap.add_argument("--relay", action="store_true",
+                    help="epidemic seeker->seeker relay (requires "
+                         "--gossip): the anchor pushes only to "
+                         "--gossip-fanout seed seekers per round and "
+                         "the seekers relay delta chains to each other "
+                         "— anchor cost O(fanout), convergence "
+                         "O(log N) rounds")
+    ap.add_argument("--relay-seekers", type=int, default=8, metavar="N",
+                    help="seeker caches in the relay plane (routing "
+                         "reads seeker 0; the rest carry the epidemic)")
+    ap.add_argument("--relay-fanout", type=int, default=2,
+                    help="neighbors each seeker pushes to per relay "
+                         "round (seeded k-regular random sampling)")
+    ap.add_argument("--relay-history", type=int, default=8,
+                    help="per-shard delta chain depth a seeker retains "
+                         "for forwarding (behind it: anti-entropy)")
+    ap.add_argument("--relay-seed", type=int, default=0,
+                    help="relay topology RNG seed (deterministic "
+                         "per-round neighbor sampling)")
     args = ap.parse_args(argv)
     if args.windowed and args.algorithm != "gtrac":
         ap.error("--windowed routes via the gtrac batch router; "
@@ -76,6 +95,8 @@ def main(argv=None):
     if args.algorithm != "gtrac" and args.gossip:
         ap.error("--gossip serves from the trust-aware seeker cache; "
                  "--algorithm %s does not consume it" % args.algorithm)
+    if args.relay and not args.gossip:
+        ap.error("--relay rides on the gossip sync plane; add --gossip")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -104,6 +125,12 @@ def main(argv=None):
                        gossip_fanout=args.gossip_fanout,
                        gossip_stale_margin=args.gossip_stale_margin,
                        gossip_stale_decay=args.gossip_stale_decay,
+                       relay_enabled=args.relay,
+                       relay_fanout=args.relay_fanout,
+                       relay_history=args.relay_history,
+                       relay_seed=args.relay_seed,
+                       gossip_seekers=(args.relay_seekers if args.relay
+                                       else 1),
                        **gossip_kw)
     srv = GTRACPipelineServer(cfg, params,
                               layers_per_stage=args.layers_per_stage,
@@ -134,6 +161,14 @@ def main(argv=None):
             print(f"gossip: {g.rounds} rounds, {g.deltas} deltas "
                   f"({g.delta_bytes} B), {g.full_syncs} full syncs "
                   f"({g.full_bytes} B), max staleness {stale} rounds")
+            if srv.gossip.relay is not None:
+                rs = srv.gossip.relay.stats
+                print(f"relay: {args.relay_seekers} seekers, "
+                      f"{rs.msgs} msgs ({rs.msg_bytes} B), "
+                      f"{rs.deltas_applied} deltas applied, "
+                      f"{rs.gaps} gaps ({rs.anchor_repairs} anchor / "
+                      f"{rs.peer_full_syncs} peer repairs), "
+                      f"anchor bytes {g.anchor_bytes()} B")
         return
     ok = 0
     for rid in range(args.requests):

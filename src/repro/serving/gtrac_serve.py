@@ -77,6 +77,21 @@ def make_stage_fns(cfg: ModelConfig, params, partition: StagePartition):
     return [stage_fn(i) for i in range(n)]
 
 
+def sample_token(logits, rng: np.random.Generator,
+                 temperature: float = 1.0) -> int:
+    """Temperature sampling off the testbed RNG: softmax of the last
+    position's logits at ``temperature``, one categorical draw. Runs on
+    host numpy — the testbed's RNG is the single source of randomness
+    for the whole sim (failures, latencies, sampling), which keeps runs
+    reproducible per seed."""
+    z = np.asarray(logits, np.float64).reshape(-1)
+    z = z / max(float(temperature), 1e-6)
+    z -= z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(len(p), p=p))
+
+
 # ---------------------------------------------------------------------------
 # Routed pipeline server
 # ---------------------------------------------------------------------------
@@ -97,6 +112,10 @@ class ServeMetrics:
     # gossip serving (cfg.gossip_enabled): worst per-shard seeker-cache
     # staleness (in gossip rounds) seen while this stream was active
     stale_rounds_max: int = 0
+    # relay serving (cfg.relay_enabled): cumulative relay-plane totals
+    # (messages delivered / measured wire bytes) at stream completion
+    relay_msgs: int = 0
+    relay_bytes: int = 0
 
 
 @dataclass
@@ -155,8 +174,13 @@ class GTRACPipelineServer:
         self.gossip = None
         self.sync_seeker = None
         if self.gcfg.gossip_enabled:
-            _, (self.sync_seeker,), self.gossip = make_sync_plane(
-                anchor, self.gcfg, n_seekers=1, now=0.0)
+            # routing reads seeker 0; with cfg.relay_enabled the rest of
+            # cfg.gossip_seekers carry the epidemic relay plane (the
+            # anchor then pushes only to gossip_fanout seeds per round)
+            _, sync_seekers, self.gossip = make_sync_plane(
+                anchor, self.gcfg,
+                n_seekers=max(1, self.gcfg.gossip_seekers), now=0.0)
+            self.sync_seeker = sync_seekers[0]
         # per-server planner: compiled CSR graph + K-best plans are reused
         # across every token routed from an unchanged registry snapshot
         self.planner = RoutePlanner(cfg.num_layers,
@@ -208,7 +232,8 @@ class GTRACPipelineServer:
     # -- serving ---------------------------------------------------------------
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int,
-                 request_id: int = 0, greedy: bool = True)\
+                 request_id: int = 0, greedy: bool = True,
+                 temperature: float = 1.0)\
             -> Tuple[np.ndarray, ServeMetrics]:
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
         metrics = ServeMetrics()
@@ -242,15 +267,27 @@ class GTRACPipelineServer:
                 metrics.failures += 1
                 break
             _, logits = payload
-            nxt = (jnp.argmax(logits[:, -1, :], -1) if greedy else
-                   jnp.argmax(logits[:, -1, :], -1))
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1, :], -1)
+            else:
+                tok = sample_token(logits[:, -1, :], self.bed.rng,
+                                   temperature)
+                nxt = jnp.full((tokens.shape[0],), tok, jnp.int32)
             tokens = jnp.concatenate([tokens, nxt[:, None].astype(jnp.int32)],
                                      axis=1)
             metrics.tokens += 1
             metrics.token_latency_ms.append(report.total_latency_ms)
         self.bed.peers and [p.forget_request(request_id)
                             for p in self.bed.peers.values()]
+        self._mirror_relay_stats(metrics)
         return np.asarray(tokens[0, len(prompt):]), metrics
+
+    def _mirror_relay_stats(self, metrics: ServeMetrics) -> None:
+        """Surface cumulative relay-plane totals on a stream's metrics."""
+        if self.gossip is not None and self.gossip.relay is not None:
+            rs = self.gossip.relay.stats
+            metrics.relay_msgs = rs.msgs
+            metrics.relay_bytes = rs.msg_bytes + rs.peer_full_bytes
 
     # -- window-batched serving (the batch router path) ------------------------
 
@@ -345,4 +382,6 @@ class GTRACPipelineServer:
                     for p in self.bed.peers.values():
                         p.forget_request(req.request_id)
             active = [r for r in active if not r.done]
+        for req in served:
+            self._mirror_relay_stats(req.metrics)
         return served

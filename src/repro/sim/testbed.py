@@ -166,6 +166,10 @@ class PartitionStats:
     max_stale_rounds: int = 0      # worst per-shard staleness while cut off
     rounds_to_convergence: int = -1   # gossip rounds after heal (-1: never)
     converged: bool = False
+    # relay scenario class (sync/relay.py): a seeker partitioned from
+    # the anchor but reachable by relay neighbors keeps converging —
+    # checked at the END of the partition phase, before the heal
+    converged_during_partition: bool = False
     delta_bytes: int = 0           # wire bytes shipped during reconciliation
     full_bytes: int = 0
     gap_repairs: int = 0           # DeltaGapErrors repaired by anti-entropy
@@ -189,7 +193,14 @@ def simulate_partition(bed: Testbed, sched, seeker,
     table matches the composed snapshot column-for-column, counting the
     rounds reconciliation took. ``sched``/``seeker`` are a
     ``repro.sync.gossip.GossipScheduler`` and its ``SeekerCache``
-    (duck-typed to keep sim free of a hard sync-plane import)."""
+    (duck-typed to keep sim free of a hard sync-plane import).
+
+    With a relay-enabled scheduler this doubles as the epidemic
+    scenario class: the partition blocks only the anchor leg, so a
+    relay-reachable seeker keeps converging through its neighbors —
+    ``converged_during_partition`` records whether it was already
+    caught up before the heal (and the post-heal loop then typically
+    reports 0 reconciliation rounds)."""
     stats = PartitionStats(partition_windows=partition_windows)
     b0 = (sched.stats.delta_bytes, sched.stats.full_bytes,
           sched.stats.gap_repairs)
@@ -203,6 +214,7 @@ def simulate_partition(bed: Testbed, sched, seeker,
         stats.max_stale_rounds = max(
             stats.max_stale_rounds,
             int(seeker.staleness_rounds(bed.now).max()))
+    stats.converged_during_partition = sched.converged(seeker, bed.now)
     sched.heal(seeker, shards)
     for r in range(max_heal_rounds):
         if sched.converged(seeker, bed.now):

@@ -6,12 +6,15 @@ and now dissemination: ``delta`` is the wire format (per-shard columnar
 diffs + full-snapshot fallback), ``seeker`` the edge-side shard mirrors
 that materialize bit-identical route tables, ``gossip`` the round
 scheduler (version-vector push, fanout-capped dirty-shard pull,
-anti-entropy full sync after partition heal).
+anti-entropy full sync after partition heal), and ``relay`` the
+epidemic seeker→seeker plane that keeps the anchor's per-round push
+cost O(fanout) while updates reach all N seekers in O(log N) rounds.
 """
 from repro.sync.delta import (
     DeltaGapError,
     ShardDelta,
     apply_delta,
+    copy_state,
     empty_state,
     full_delta,
     make_delta,
@@ -27,12 +30,23 @@ from repro.sync.gossip import (
     registry_shard_state,
     registry_version_vector,
 )
+from repro.sync.relay import (
+    RelayMessage,
+    RelayNode,
+    RelayPlane,
+    RelayStats,
+    RelayTopology,
+)
 from repro.sync.seeker import SeekerCache, SeekerSyncStats
 
 __all__ = [
-    "DeltaGapError", "ShardDelta", "apply_delta", "empty_state",
-    "full_delta", "make_delta", "slice_state", "state_wire_bytes",
+    "DeltaGapError", "ShardDelta", "apply_delta", "copy_state",
+    "empty_state", "full_delta", "make_delta", "slice_state",
+    "state_wire_bytes",
     "GossipPublisher", "GossipScheduler", "GossipStats",
     "make_sync_plane", "registry_n_shards", "registry_shard_state",
-    "registry_version_vector", "SeekerCache", "SeekerSyncStats",
+    "registry_version_vector",
+    "RelayMessage", "RelayNode", "RelayPlane", "RelayStats",
+    "RelayTopology",
+    "SeekerCache", "SeekerSyncStats",
 ]

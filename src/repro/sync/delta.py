@@ -106,6 +106,29 @@ def _concat_states(a: RegistryState, b: RegistryState) -> RegistryState:
     )
 
 
+def copy_state(state: RegistryState) -> RegistryState:
+    """Defensive copy for mirror adoption: a fresh ``RegistryState``
+    object whose ``last_heartbeat`` column is a private array.
+
+    Full-snapshot messages ship the *same* state object the publisher
+    keeps as its delta base (and, on the relay plane, the same object to
+    ``relay_fanout`` receivers at once). Adopting it directly would let
+    a later ``refresh_heartbeats`` on one seeker rebind the shared
+    object's liveness column under every other holder. Row columns are
+    never mutated after export (every registry mutation rebuilds them),
+    so they stay shared zero-copy; only the object identity and the one
+    in-place-refreshed column need to be private."""
+    return RegistryState(
+        peer_ids=state.peer_ids, layer_start=state.layer_start,
+        layer_end=state.layer_end, trust=state.trust,
+        latency_ms=state.latency_ms,
+        last_heartbeat=state.last_heartbeat.copy(),
+        successes=state.successes, failures=state.failures,
+        profiles=list(state.profiles),
+        seq=state.seq,
+    )
+
+
 def empty_state() -> RegistryState:
     """A zero-row state with a seq column — the seeker's boot mirror."""
     return RegistryState(

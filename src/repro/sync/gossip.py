@@ -20,7 +20,11 @@ has aged out of the history get a full shard snapshot instead.
   grows, and staleness-bounded routing (sync/seeker.py) takes over;
 * **anti-entropy** — ``full_sync`` ships whole shard snapshots (boot,
   partition heal, or a ``DeltaGapError`` on a version gap), after which
-  the seeker is bit-identical to the anchor again (``converged``).
+  the seeker is bit-identical to the anchor again (``converged``);
+* **relay** — with ``relay_enabled`` the anchor leg runs only against
+  ``gossip_fanout`` rotating seed seekers per round and an epidemic
+  seeker→seeker relay round (sync/relay.py) carries the rest: anchor
+  push cost O(fanout), convergence O(log N) rounds.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ from repro.configs.base import GTRACConfig
 from repro.core.sharding import ShardedAnchorRegistry
 from repro.core.types import RegistryState
 from repro.sync.delta import HEADER_BYTES, DeltaGapError, ShardDelta, full_delta, make_delta
+from repro.sync.relay import RelayPlane
 from repro.sync.seeker import SeekerCache
 
 
@@ -97,6 +102,13 @@ class GossipStats:
     hb_bytes: int = 0
     hb_refresh_dropped: int = 0   # renewals the seeker could not take
 
+    def anchor_bytes(self) -> int:
+        """Total bytes the ANCHOR shipped (deltas + full syncs + hb
+        leases) — the cost the relay plane keeps O(fanout) per round.
+        Relay traffic is seeker→seeker and counted separately
+        (RelayStats.msg_bytes / peer_full_bytes)."""
+        return self.delta_bytes + self.full_bytes + self.hb_bytes
+
 
 class GossipPublisher:
     """Anchor-side per-shard state keeper + delta source."""
@@ -154,13 +166,21 @@ class GossipPublisher:
 
 
 class GossipScheduler:
-    """Round-driver between one publisher and its subscribed seekers."""
+    """Round-driver between one publisher and its subscribed seekers.
+
+    With ``relay_enabled`` (sync/relay.py) the anchor leg shrinks to
+    ``gossip_fanout`` rotating *seed* seekers per round — each seeded
+    fully (every reachable dirty shard, plus the hb-lease renewals) so
+    it is a clean epidemic source — and a relay round then spreads seed
+    state seeker→seeker; anchor cost per round is O(fanout), not
+    O(seekers)."""
 
     def __init__(self, publisher: GossipPublisher,
                  seekers: Sequence[SeekerCache],
                  cfg: Optional[GTRACConfig] = None,
                  fanout: Optional[int] = None,
-                 period_s: Optional[float] = None):
+                 period_s: Optional[float] = None,
+                 relay: Optional[bool] = None):
         self.publisher = publisher
         self.seekers: List[SeekerCache] = list(seekers)
         cfg = cfg or publisher.cfg
@@ -168,8 +188,29 @@ class GossipScheduler:
         self.period_s = float(cfg.gossip_period_s if period_s is None
                               else period_s)
         self._last_round: Optional[float] = None
-        self._blocked: Dict[int, Set[int]] = {}   # id(seeker) -> shard set
+        # keyed by SeekerCache.source_id (stable and unique) — keying by
+        # id(seeker) let a garbage-collected seeker's reused id silently
+        # hand its partition state to a fresh seeker
+        self._blocked: Dict[int, Set[int]] = {}
         self.stats = GossipStats()
+        relay_on = cfg.relay_enabled if relay is None else bool(relay)
+        self.relay: Optional[RelayPlane] = (RelayPlane(cfg)
+                                            if relay_on else None)
+
+    # -- membership ----------------------------------------------------------
+
+    def add_seeker(self, seeker: SeekerCache) -> None:
+        if seeker not in self.seekers:
+            self.seekers.append(seeker)
+
+    def remove_seeker(self, seeker: SeekerCache) -> None:
+        """Unsubscribe a seeker and drop every per-seeker state keyed on
+        it (partition set, relay node) — nothing may leak onto a future
+        seeker."""
+        self.seekers = [s for s in self.seekers if s is not seeker]
+        self._blocked.pop(seeker.source_id, None)
+        if self.relay is not None:
+            self.relay.forget(seeker)
 
     # -- partition control ---------------------------------------------------
 
@@ -177,10 +218,12 @@ class GossipScheduler:
                   shards: Optional[Sequence[int]] = None) -> None:
         """Cut one seeker off from a subset of anchor shards (default:
         all of them). Blocked shards get no pushes and no pulls until
-        ``heal`` — their staleness grows every round."""
+        ``heal`` — their staleness grows every round. The relay plane is
+        unaffected: an anchor-partitioned seeker keeps converging
+        through its neighbors."""
         all_shards = range(self.publisher.n_shards)
         add = set(all_shards) if shards is None else set(shards)
-        self._blocked.setdefault(id(seeker), set()).update(add)
+        self._blocked.setdefault(seeker.source_id, set()).update(add)
 
     def heal(self, seeker: SeekerCache,
              shards: Optional[Sequence[int]] = None) -> None:
@@ -188,32 +231,52 @@ class GossipScheduler:
         on the following rounds: pulls for shards whose base version is
         still in the publisher's history, anti-entropy full syncs for
         the rest."""
-        blocked = self._blocked.get(id(seeker))
+        blocked = self._blocked.get(seeker.source_id)
         if blocked is None:
             return
         blocked -= set(range(self.publisher.n_shards)) \
             if shards is None else set(shards)
         if not blocked:
-            self._blocked.pop(id(seeker), None)
+            self._blocked.pop(seeker.source_id, None)
 
     def blocked_shards(self, seeker: SeekerCache) -> Set[int]:
-        return set(self._blocked.get(id(seeker), set()))
+        return set(self._blocked.get(seeker.source_id, set()))
 
     # -- rounds --------------------------------------------------------------
 
+    #: catch-up bound: a driver that stalled longer than this many
+    #: periods fires this many rounds (plenty for the epidemic to
+    #: drain) and resynchronizes the cadence clock
+    MAX_CATCHUP_ROUNDS = 16
+
     def maybe_tick(self, now: float) -> bool:
-        """Run a round iff ``gossip_period_s`` elapsed since the last."""
-        if self._last_round is not None and \
-                now - self._last_round < self.period_s:
+        """Catch the cadence up to ``now``: run one round per elapsed
+        ``gossip_period_s`` (capped at ``MAX_CATCHUP_ROUNDS``), exactly
+        the rounds a background sync thread would have fired while a
+        sim driver stalled inside a long request. Matters most on the
+        relay plane, where information moves one hop per ROUND — a
+        single round per multi-period stall would let relayed
+        observation times (and so staleness) lag arbitrarily."""
+        if self._last_round is None or self.period_s <= 0:
+            # no cadence (period 0 = tick every call), or first round
+            self.tick(now)
+            return True
+        missed = int((now - self._last_round) / self.period_s)
+        if missed <= 0:
             return False
-        self.tick(now)
+        missed = min(missed, self.MAX_CATCHUP_ROUNDS)
+        for i in range(missed, 0, -1):
+            self.tick(now - (i - 1) * self.period_s)
         return True
 
     def tick(self, now: float) -> None:
         """One gossip round: fold anchor-side liveness flips into the
-        version vector, push it to every seeker, let each pull its
-        dirtiest reachable shards (fanout-capped), then renew aging
-        heartbeat-column leases (``gossip_hb_refresh_frac``)."""
+        version vector, push it to every seeker (relay mode: only the
+        round's seeds), let each pushed seeker pull its dirtiest
+        reachable shards (fanout-capped; relay seeds pull everything),
+        renew aging heartbeat-column leases
+        (``gossip_hb_refresh_frac``), then run one epidemic relay round
+        when the relay plane is on."""
         self._last_round = now
         self.stats.rounds += 1
         registry_poke_liveness(self.publisher.registry, now)
@@ -221,33 +284,82 @@ class GossipScheduler:
         n = self.publisher.n_shards
         cfg = self.publisher.cfg
         refresh_s = cfg.gossip_hb_refresh_frac * cfg.node_ttl_s
-        for seeker in self.seekers:
-            blocked = self._blocked.get(id(seeker), ())
-            if len(blocked) >= n:
-                continue          # fully partitioned: no push reaches it
-            reachable = [s not in blocked for s in range(n)]
-            dirty = seeker.observe(vv, now, reachable=reachable)
-            self.stats.pushes += 1
-            ages = seeker.staleness(now)
-            dirty.sort(key=lambda s: -ages[s])    # stalest first
-            take, defer = dirty[:self.fanout], dirty[self.fanout:]
-            self.stats.deferred += len(defer)
-            for s in take:
-                self._ship(seeker, s, now)
-            if refresh_s <= 0:
+        if self.relay is None:
+            targets, shard_cap = self.seekers, self.fanout
+        else:
+            # seeds pull every reachable dirty shard: anchor cost stays
+            # O(fanout seekers), and a fully-fresh seed is what makes
+            # the epidemic converge in O(log N) rounds
+            targets, shard_cap = self._seed_seekers(n), n
+        for seeker in targets:
+            self._anchor_round(seeker, vv, n, now, refresh_s, shard_cap)
+        if self.relay is not None:
+            self.relay.round(self.seekers, now,
+                             anchor_pull=self._relay_pull)
+
+    def _seed_seekers(self, n_shards: int) -> List[SeekerCache]:
+        """This round's anchor-push seeds: ``gossip_fanout`` seekers in
+        rotation (so every seeker periodically talks to the anchor),
+        skipping fully-partitioned ones."""
+        n_seek = len(self.seekers)
+        count = min(self.fanout, n_seek)
+        start = (self.stats.rounds - 1) * count
+        seeds: List[SeekerCache] = []
+        for i in range(n_seek):
+            sk = self.seekers[(start + i) % n_seek]
+            if len(self._blocked.get(sk.source_id, ())) >= n_shards:
                 continue
-            hb_ages = seeker.hb_age(now)
-            behind = set(defer)    # deferred data: membership may lag,
-            for s in range(n):     # a refresh would only bounce — skip
-                if reachable[s] and s not in behind \
-                        and hb_ages[s] >= refresh_s:
-                    hb = self.publisher.heartbeats(s)
-                    if seeker.refresh_heartbeats(s, hb, now):
-                        self.stats.hb_refreshes += 1
-                        self.stats.hb_bytes += int(hb.nbytes) + \
-                            HEADER_BYTES
-                    else:
-                        self.stats.hb_refresh_dropped += 1
+            seeds.append(sk)
+            if len(seeds) >= count:
+                break
+        return seeds
+
+    def _anchor_round(self, seeker: SeekerCache, vv: Tuple[int, ...],
+                      n: int, now: float, refresh_s: float,
+                      shard_cap: int) -> None:
+        """The anchor→seeker leg for one seeker: version-vector push,
+        stalest-first dirty pulls up to ``shard_cap``, hb-lease renewal."""
+        blocked = self._blocked.get(seeker.source_id, ())
+        if len(blocked) >= n:
+            return               # fully partitioned: no push reaches it
+        reachable = [s not in blocked for s in range(n)]
+        dirty = seeker.observe(vv, now, reachable=reachable)
+        self.stats.pushes += 1
+        if self.relay is not None:
+            # a direct push is an authoritative vv sighting the seeker
+            # will relay onward (with its observation time)
+            self.relay.observe_anchor(seeker, vv, now)
+        ages = seeker.staleness(now)
+        dirty.sort(key=lambda s: -ages[s])    # stalest first
+        take, defer = dirty[:shard_cap], dirty[shard_cap:]
+        self.stats.deferred += len(defer)
+        for s in take:
+            self._ship(seeker, s, now)
+        if refresh_s <= 0:
+            return
+        hb_ages = seeker.hb_age(now)
+        behind = set(defer)    # deferred data: membership may lag,
+        for s in range(n):     # a refresh would only bounce — skip
+            if reachable[s] and s not in behind \
+                    and hb_ages[s] >= refresh_s:
+                hb = self.publisher.heartbeats(s)
+                if seeker.refresh_heartbeats(s, hb, now):
+                    self.stats.hb_refreshes += 1
+                    self.stats.hb_bytes += int(hb.nbytes) + \
+                        HEADER_BYTES
+                else:
+                    self.stats.hb_refresh_dropped += 1
+
+    def _relay_pull(self, seeker: SeekerCache, shard: int,
+                    now: float) -> bool:
+        """Relay gap repair: anti-entropy pull from the anchor — the
+        root of trust — when the shard is reachable for this seeker.
+        Returns False when partitioned off (the relay plane then falls
+        back to a neighbor's full mirror)."""
+        if shard in self._blocked.get(seeker.source_id, ()):
+            return False
+        self._ship(seeker, shard, now)
+        return True
 
     def _ship(self, seeker: SeekerCache, shard: int, now: float) -> None:
         delta = self.publisher.pull(shard, seeker.version_vector[shard])
@@ -264,6 +376,8 @@ class GossipScheduler:
         else:
             self.stats.deltas += 1
             self.stats.delta_bytes += delta.wire_bytes()
+            if self.relay is not None:
+                self.relay.record(seeker, delta)
 
     # -- anti-entropy --------------------------------------------------------
 
@@ -279,6 +393,10 @@ class GossipScheduler:
             self.stats.full_syncs += 1
             total += delta.wire_bytes()
         self.stats.full_bytes += total
+        if self.relay is not None:
+            # direct anchor contact: an authoritative vv sighting
+            self.relay.observe_anchor(
+                seeker, self.publisher.version_vector(), now)
         return total
 
     # -- convergence ---------------------------------------------------------
@@ -298,6 +416,13 @@ class GossipScheduler:
                 and np.array_equal(ta.trust, ts.trust)
                 and np.array_equal(ta.latency_ms, ts.latency_ms)
                 and np.array_equal(ta.alive, ts.alive))
+
+    def all_converged(self, now: float, check_table: bool = False) -> bool:
+        """Every subscribed seeker converged (the relay-lane bench's
+        per-round probe; table check off by default — it is O(P) per
+        seeker)."""
+        return all(self.converged(sk, now, check_table=check_table)
+                   for sk in self.seekers)
 
 
 def make_sync_plane(registry, cfg: Optional[GTRACConfig] = None,

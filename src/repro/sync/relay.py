@@ -1,0 +1,314 @@
+"""Epidemic seeker→seeker relay: the anchor's fanout stays O(seeds)
+while trust updates reach every edge peer in O(log N) rounds.
+
+PR 4's gossip plane pushed anchor state to every subscribed seeker each
+round — O(seekers) anchor cost, exactly the scaling wall ROADMAP's
+"multi-seeker gossip topologies" item names. With ``relay_enabled`` the
+anchor talks to only ``gossip_fanout`` *seed* seekers per round
+(rotating, so every seeker is periodically a seed) and the seekers carry
+the rest themselves:
+
+* **RelayTopology** — deterministic k-regular-out random peer sampling:
+  each round every seeker pushes to ``relay_fanout`` neighbors drawn by
+  a seeded RNG keyed on (relay_seed, round), so runs are reproducible
+  and the expected in-degree equals the fanout.
+* **RelayNode** — per-seeker relay state: a ``relay_history``-bounded
+  per-shard chain of the (non-full) ``ShardDelta``s the seeker applied,
+  in version order, plus the freshest anchor version-vector observation
+  it has heard (directly as a seed, or relayed) — the epidemic carries
+  the anchor's version vector too, so staleness clocks keep refreshing
+  on shards whose data did not move.
+* **RelayMessage** — what one push carries: the sender's per-shard
+  versions and delta chains, its heartbeat columns (the liveness lease
+  spreads epidemically — only seeds get anchor hb refreshes), and the
+  relayed version-vector observation. ``wire_bytes()`` is measured, as
+  everywhere in the sync plane.
+* **RelayPlane.round** — build every seeker's message first (a round is
+  a simultaneous exchange), then deliver along the topology. Receivers
+  apply chain deltas strictly in version order through the existing
+  ``SeekerCache.apply`` contract: duplicates are idempotent skips, and
+  a chain that cannot link to the receiver's version is a *gap* —
+  repaired by an anti-entropy pull from the anchor when the shard is
+  reachable (the anchor stays the root of trust), or by adopting the
+  sender's full shard mirror when it is not (how an anchor-partitioned
+  but relay-reachable seeker keeps converging). Heartbeat columns are
+  adopted only at matching shard versions (identical membership) and
+  only when strictly fresher, stamped with the sender's lease time —
+  staleness is never overstated as freshness.
+
+The scheduler (sync/gossip.py) owns the cadence: one relay round per
+gossip round, after the anchor's seed pushes.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import GTRACConfig
+from repro.sync.delta import HEADER_BYTES, ShardDelta, full_delta
+from repro.sync.seeker import SeekerCache
+
+#: gap-repair callback: (seeker, shard, now) -> True iff an anchor pull
+#: repaired the shard (False when the shard is partitioned off)
+AnchorPull = Callable[[SeekerCache, int, float], bool]
+
+
+@dataclass
+class RelayStats:
+    rounds: int = 0
+    msgs: int = 0                 # relay messages delivered
+    msg_bytes: int = 0            # measured wire bytes of those messages
+    deltas_applied: int = 0       # chain deltas receivers applied
+    duplicates: int = 0           # chain entries skipped as already-held
+    gaps: int = 0                 # chains that could not link
+    anchor_repairs: int = 0       # gaps repaired by an anchor pull
+    peer_full_syncs: int = 0      # gaps repaired by a neighbor's mirror
+    peer_full_bytes: int = 0
+    hb_adopted: int = 0           # heartbeat columns taken from neighbors
+    vv_forwarded: int = 0         # fresher anchor vv observations adopted
+
+
+class RelayTopology:
+    """Deterministic k-regular-out random peer sampling per round."""
+
+    def __init__(self, fanout: int, seed: int = 0):
+        self.fanout = int(fanout)
+        self.seed = int(seed)
+
+    def neighbors(self, n: int, round_idx: int) -> List[np.ndarray]:
+        """Per-seeker push targets for one round: ``n`` rows of
+        ``min(fanout, n-1)`` distinct indices, never the seeker itself.
+        Identical (seed, round) → identical topology."""
+        k = min(self.fanout, n - 1)
+        if n <= 1 or k <= 0:
+            return [np.empty(0, np.int64) for _ in range(n)]
+        rng = np.random.default_rng([self.seed, int(round_idx)])
+        out = []
+        for i in range(n):
+            pick = rng.choice(n - 1, size=k, replace=False)
+            pick = pick + (pick >= i)          # skip self
+            out.append(pick.astype(np.int64))
+        return out
+
+
+@dataclass
+class RelayMessage:
+    """One seeker's push payload (identical to every neighbor)."""
+
+    sender_id: int
+    versions: Tuple[int, ...]                 # sender's mirrored versions
+    chains: List[List[ShardDelta]]            # per shard, version order
+    hb_cols: List[Optional[np.ndarray]]       # None = lease too old to help
+    hb_times: np.ndarray                      # (S,) sender lease stamps
+    sync_stamps: np.ndarray                   # (S,) sender confirmation times
+    vv_obs: Optional[Tuple[int, ...]] = None  # freshest anchor vv heard
+    vv_obs_time: float = float("-inf")
+    _wire_bytes: Optional[int] = None         # memo — the message is
+                                              # immutable once built and
+                                              # delivered fanout times
+
+    def wire_bytes(self) -> int:
+        if self._wire_bytes is not None:
+            return self._wire_bytes
+        # versions + sync stamps + hb stamps ride per shard; vv stamp once
+        n = HEADER_BYTES + 24 * len(self.versions) + 8
+        if self.vv_obs is not None:
+            n += 8 * len(self.vv_obs)
+        for chain in self.chains:
+            n += sum(d.wire_bytes() for d in chain)
+        for col in self.hb_cols:
+            if col is not None:
+                n += int(col.nbytes)
+        self._wire_bytes = n
+        return n
+
+
+class RelayNode:
+    """Relay state riding on one ``SeekerCache``."""
+
+    def __init__(self, seeker: SeekerCache, cfg: GTRACConfig):
+        self.seeker = seeker
+        self.history = max(1, int(cfg.relay_history))
+        self._chains: List["OrderedDict[int, ShardDelta]"] = [
+            OrderedDict() for _ in range(seeker.n_shards)]
+        self.vv_obs: Optional[Tuple[int, ...]] = None
+        self.vv_obs_time: float = float("-inf")
+
+    def observe_anchor(self, vv: Sequence[int], now: float) -> None:
+        """An authoritative version-vector sighting (seed push or full
+        sync) — what this node will relay onward."""
+        if now >= self.vv_obs_time:
+            self.vv_obs, self.vv_obs_time = tuple(vv), float(now)
+
+    def observe_relayed(self, vv: Optional[Tuple[int, ...]],
+                        t: float) -> bool:
+        """Adopt a neighbor's anchor-vv observation iff strictly
+        fresher. Returns whether it was taken."""
+        if vv is None or t <= self.vv_obs_time:
+            return False
+        self.vv_obs, self.vv_obs_time = tuple(vv), float(t)
+        return True
+
+    def record(self, delta: ShardDelta) -> None:
+        """Buffer one applied delta for forwarding. Chains stay
+        delta-only (full snapshots re-ship on demand via the gap path —
+        recording them would multiply whole-shard payloads through every
+        hop) and ``relay_history``-bounded; empty version-only advances
+        ARE recorded, they are what keeps a chain linkable."""
+        if delta.is_full:
+            return
+        chain = self._chains[delta.shard]
+        v = int(delta.new_version)
+        chain[v] = delta
+        chain.move_to_end(v)
+        while len(chain) > self.history:
+            chain.popitem(last=False)
+
+    def message(self, now: float, ttl_s: float) -> RelayMessage:
+        """Snapshot this node's push payload for one round."""
+        sk = self.seeker
+        hb_cols: List[Optional[np.ndarray]] = []
+        hb_times = np.empty(sk.n_shards, np.float64)
+        sync_stamps = np.empty(sk.n_shards, np.float64)
+        for s in range(sk.n_shards):
+            t = sk.hb_stamp(s)
+            hb_times[s] = t
+            sync_stamps[s] = sk.sync_stamp(s)
+            # forward liveness only while the lease is still informative
+            hb_cols.append(sk.mirror(s).last_heartbeat
+                           if now - t <= ttl_s else None)
+        return RelayMessage(
+            sender_id=sk.source_id, versions=sk.version_vector,
+            chains=[list(c.values()) for c in self._chains],
+            hb_cols=hb_cols, hb_times=hb_times, sync_stamps=sync_stamps,
+            vv_obs=self.vv_obs, vv_obs_time=self.vv_obs_time)
+
+
+class RelayPlane:
+    """Topology + per-seeker relay nodes + one-round drive."""
+
+    def __init__(self, cfg: GTRACConfig, fanout: Optional[int] = None,
+                 seed: Optional[int] = None,
+                 stats: Optional[RelayStats] = None):
+        self.cfg = cfg
+        self.topology = RelayTopology(
+            cfg.relay_fanout if fanout is None else fanout,
+            cfg.relay_seed if seed is None else seed)
+        self._nodes: Dict[int, RelayNode] = {}     # by seeker.source_id
+        self.stats = stats if stats is not None else RelayStats()
+        self._round = 0
+
+    def node(self, seeker: SeekerCache) -> RelayNode:
+        node = self._nodes.get(seeker.source_id)
+        if node is None:
+            node = self._nodes[seeker.source_id] = RelayNode(seeker,
+                                                             self.cfg)
+        return node
+
+    def forget(self, seeker: SeekerCache) -> None:
+        """Drop a departed seeker's relay state (scheduler hygiene)."""
+        self._nodes.pop(seeker.source_id, None)
+
+    def record(self, seeker: SeekerCache, delta: ShardDelta) -> None:
+        """Scheduler hook: an anchor ship this seeker applied — buffer
+        it for forwarding."""
+        self.node(seeker).record(delta)
+
+    def observe_anchor(self, seeker: SeekerCache, vv: Sequence[int],
+                       now: float) -> None:
+        self.node(seeker).observe_anchor(vv, now)
+
+    # -- one epidemic round --------------------------------------------------
+
+    def round(self, seekers: Sequence[SeekerCache], now: float,
+              anchor_pull: Optional[AnchorPull] = None) -> None:
+        """Every seeker pushes its message to ``relay_fanout`` neighbors
+        drawn for this round. Messages are built first — a round models
+        a simultaneous exchange, so what spreads is the state seekers
+        held at the round's start (applications during delivery only
+        shorten later receivers' duplicate skips)."""
+        self.stats.rounds += 1
+        n = len(seekers)
+        ttl = float(self.cfg.node_ttl_s)
+        msgs = [self.node(sk).message(now, ttl) for sk in seekers]
+        nbrs = self.topology.neighbors(n, self._round)
+        self._round += 1
+        for i, sk in enumerate(seekers):
+            for j in nbrs[i]:
+                self.deliver(msgs[i], self.node(sk), seekers[int(j)],
+                             now, anchor_pull)
+
+    def deliver(self, msg: RelayMessage, sender: RelayNode,
+                receiver: SeekerCache, now: float,
+                anchor_pull: Optional[AnchorPull] = None) -> None:
+        """Apply one relay message to one receiver (see module
+        docstring for the gap / duplicate / liveness semantics)."""
+        st = self.stats
+        node = self.node(receiver)
+        st.msgs += 1
+        st.msg_bytes += msg.wire_bytes()
+        if node.observe_relayed(msg.vv_obs, msg.vv_obs_time):
+            st.vv_forwarded += 1
+        if msg.vv_obs is not None:
+            # refresh staleness clocks on shards the relayed vv confirms
+            # (observe is max-guarded: an older sighting cannot rewind)
+            receiver.observe(msg.vv_obs, msg.vv_obs_time)
+        for s in range(receiver.n_shards):
+            cur = receiver.version_vector[s]
+            # chain applications inherit the SENDER's confirmation time
+            # (the same contract as _peer_full_sync): data that was last
+            # anchor-confirmed at the sender's stamp must not reset the
+            # receiver's staleness clock to the delivery time — a
+            # behind-the-anchor receiver has to keep routing on a
+            # discounted view (apply's max-guard keeps it monotonic)
+            t_chain = min(now, float(msg.sync_stamps[s]))
+            for delta in msg.chains[s]:
+                if delta.new_version <= cur:
+                    st.duplicates += 1
+                    continue
+                if delta.base_version != cur:
+                    break               # chain no longer links — gap
+                receiver.apply(delta, t_chain)
+                node.record(delta)      # forwardable next round
+                st.deltas_applied += 1
+                cur = int(delta.new_version)
+            if cur < msg.versions[s]:
+                st.gaps += 1
+                if anchor_pull is not None and \
+                        anchor_pull(receiver, s, now):
+                    st.anchor_repairs += 1
+                else:
+                    self._peer_full_sync(sender, receiver, s)
+            # liveness epidemic: adopt the sender's lease only at the
+            # SAME mirrored version (identical membership) and only when
+            # strictly fresher, stamped with the sender's lease time
+            col = msg.hb_cols[s]
+            if (col is not None
+                    and receiver.version_vector[s] == msg.versions[s]
+                    and msg.hb_times[s] > receiver.hb_stamp(s)):
+                if receiver.refresh_heartbeats(s, col.copy(),
+                                               float(msg.hb_times[s])):
+                    st.hb_adopted += 1
+
+    def _peer_full_sync(self, sender: RelayNode, receiver: SeekerCache,
+                        shard: int) -> None:
+        """Neighbor anti-entropy: the receiver adopts the sender's full
+        shard mirror (the anchor-partitioned-but-relay-reachable path).
+        The payload is anchor-originated state at the sender's mirrored
+        version — the anchor stays the root of trust — and it is stamped
+        with the sender's own confirmation/lease clocks, so the receiver
+        inherits the sender's staleness rather than claiming freshness."""
+        st = self.stats
+        v_now = sender.seeker.version_vector[shard]
+        if v_now <= receiver.version_vector[shard]:
+            return                      # receiver already caught up
+        fd = full_delta(sender.seeker.mirror(shard), shard=shard,
+                        new_version=v_now)
+        st.peer_full_bytes += fd.wire_bytes()
+        t = min(sender.seeker.sync_stamp(shard),
+                sender.seeker.hb_stamp(shard))
+        receiver.apply(fd, t)           # copy-on-adopt inside apply
+        st.peer_full_syncs += 1

@@ -39,7 +39,13 @@ import numpy as np
 from repro.configs.base import GTRACConfig
 from repro.core.registry import _REGISTRY_IDS
 from repro.core.types import PeerTable, RegistryState
-from repro.sync.delta import DeltaGapError, ShardDelta, apply_delta, empty_state
+from repro.sync.delta import (
+    DeltaGapError,
+    ShardDelta,
+    apply_delta,
+    copy_state,
+    empty_state,
+)
 
 APPLIED = "applied"
 DUPLICATE = "duplicate"
@@ -111,7 +117,9 @@ class SeekerCache:
             if reachable is not None and not reachable[s]:
                 continue
             if v == self._versions[s]:
-                self._synced_at[s] = now
+                # monotonic: a relayed observation may carry an OLDER
+                # timestamp than a confirmation this seeker already has
+                self._synced_at[s] = max(self._synced_at[s], now)
             else:
                 dirty.append(s)
         return dirty
@@ -140,13 +148,16 @@ class SeekerCache:
             # the staleness clocks instead of rejecting the ship
             self.stats.full_syncs += 1
             self.stats.bytes_received += delta.wire_bytes()
-            self._synced_at[s] = now
-            self._hb_at[s] = now
+            self._synced_at[s] = max(self._synced_at[s], now)
+            self._hb_at[s] = max(self._hb_at[s], now)
             st, full = self._states[s], delta.full
             if len(full.peer_ids) == len(st.peer_ids) and \
                     not np.array_equal(full.last_heartbeat,
                                        st.last_heartbeat):
-                self._states[s] = full
+                # adopt a COPY: the shipped object is also the
+                # publisher's delta base (and, with relays, every other
+                # receiver's payload) — see delta.copy_state
+                self._states[s] = copy_state(full)
                 self._dirty = True
             return APPLIED
         if cur >= 0 and delta.new_version <= cur:
@@ -163,15 +174,21 @@ class SeekerCache:
         else:
             self.stats.deltas_applied += 1
         self._versions[s] = int(delta.new_version)
-        self._synced_at[s] = now
+        # max-guarded: relayed messages may carry observation times older
+        # than a confirmation this seeker already holds
+        self._synced_at[s] = max(self._synced_at[s], now)
         if delta.is_full:
-            self._hb_at[s] = now    # a full state carries fresh liveness
+            # a full state carries liveness as fresh as its source
+            self._hb_at[s] = max(self._hb_at[s], now)
         if delta.is_empty:
             # version-only advance (liveness flip / heartbeat drift):
             # the mirror content is untouched, every table cache survives
             return APPLIED
         old = self._states[s]
-        new = apply_delta(old, delta)
+        # full snapshots are adopted as a COPY — the wire object aliases
+        # the publisher's history entry and every co-receiver's payload
+        new = (copy_state(delta.full) if delta.is_full
+               else apply_delta(old, delta))
         self._states[s] = new
         self._dirty = True
         if not (np.array_equal(old.peer_ids, new.peer_ids)
@@ -192,7 +209,7 @@ class SeekerCache:
         if len(hb) != len(st.peer_ids):
             return False
         col = np.asarray(hb, np.float64)
-        self._hb_at[shard] = now
+        self._hb_at[shard] = max(self._hb_at[shard], now)
         self.stats.hb_refreshes += 1
         if np.array_equal(col, st.last_heartbeat):
             return True             # nothing moved: every cache survives
@@ -204,6 +221,23 @@ class SeekerCache:
         """Per-shard age of the mirrored heartbeat column in seconds —
         what the scheduler compares against the refresh cadence."""
         return np.maximum(0.0, now - self._hb_at)
+
+    # -- relay accessors (sync/relay.py) -------------------------------------
+
+    def mirror(self, shard: int) -> RegistryState:
+        """One shard's mirrored columnar state — what a relay node
+        forwards. Read-only by contract: mutation goes through ``apply``
+        / ``refresh_heartbeats`` (receivers adopt copies)."""
+        return self._states[shard]
+
+    def sync_stamp(self, shard: int) -> float:
+        """When this shard's mirror was last confirmed (the clock behind
+        ``staleness``)."""
+        return float(self._synced_at[shard])
+
+    def hb_stamp(self, shard: int) -> float:
+        """When this shard's liveness column was last refreshed whole."""
+        return float(self._hb_at[shard])
 
     # -- staleness -----------------------------------------------------------
 
@@ -282,24 +316,33 @@ class SeekerCache:
         itself when no adjustment applies, and caches the adjusted table
         per (base version, stale-round vector) so consecutive windows in
         the same round share one object — planner / window-router caches
-        stay warm across a partition."""
+        stay warm across a partition. (With ``gossip_stale_decay`` on,
+        the per-second ages join the cache key: only same-instant calls
+        share an object, the price of the documented decay law.)"""
         table = self.materialize(now)
         margin = float(self.cfg.gossip_stale_margin)
         decay = float(self.cfg.gossip_stale_decay)
         rounds = self.staleness_rounds(now)
-        if (margin <= 0.0 and decay <= 0.0) or not rounds.any():
+        age = self.staleness(now)
+        # each knob gates on its own clock: the margin is a per-ROUND
+        # dock, the decay a per-SECOND law — sub-round staleness (age
+        # under one gossip period) must still decay
+        apply_margin = margin > 0.0 and bool(rounds.any())
+        apply_decay = decay > 0.0 and bool(age.any())
+        if not (apply_margin or apply_decay):
             return table
-        key = (table.version, rounds.tobytes())
+        key = (table.version, rounds.tobytes(),
+               age.tobytes() if apply_decay else b"")
         hit = self._routing
         if hit is not None and hit[0] == key:
             return hit[1]
         c = self._composed
-        age_row = self.staleness(now)[c.row_shard]
+        age_row = age[c.row_shard]
         trust = table.trust
-        if decay > 0.0:
+        if apply_decay:
             f = np.exp(-decay * age_row)
             trust = self.cfg.init_trust + (trust - self.cfg.init_trust) * f
-        if margin > 0.0:
+        if apply_margin:
             dock = np.minimum(margin * rounds[c.row_shard],
                               self.cfg.gossip_stale_margin_max)
             trust = trust - dock

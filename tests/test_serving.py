@@ -7,9 +7,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.configs.base import GTRACConfig
 from repro.models.api import build_model
 from repro.serving.engine import ServingEngine
-from repro.serving.gtrac_serve import GTRACPipelineServer
+from repro.serving.gtrac_serve import GTRACPipelineServer, sample_token
 
 KEY = jax.random.PRNGKey(7)
 
@@ -99,6 +100,63 @@ class TestGTRACServer:
         g = np.mean([run("gtrac", s) for s in range(2)])
         s = np.mean([run("sp", s) for s in range(2)])
         assert g >= s  # the honey-pot effect (paper §VI-A)
+
+    def test_nongreedy_sampling_can_emit_non_argmax(self, tiny):
+        """Regression: generate(greedy=False) was dead code — both
+        branches of the conditional took argmax. Real temperature
+        sampling off the testbed RNG must be able to leave the argmax
+        chain (same params + prompt, so any divergence is sampling)."""
+        cfg, model, params = tiny
+
+        def build():
+            return GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                       replicas={"golden": 2},
+                                       algorithm="gtrac", seed=0)
+
+        prompt = np.arange(1, 9)
+        greedy_out, gm = build().generate(prompt, max_new_tokens=6,
+                                          greedy=True)
+        sampled, sm = build().generate(prompt, max_new_tokens=6,
+                                       greedy=False, temperature=8.0)
+        assert gm.tokens == 6 and sm.tokens == 6
+        assert all(0 <= t < cfg.vocab_size for t in sampled)
+        assert list(sampled) != list(greedy_out)   # pre-fix: identical
+
+    def test_sample_token_temperature_law(self):
+        """Low temperature concentrates on the argmax; high temperature
+        spreads — and every draw comes off the supplied RNG."""
+        logits = np.zeros(32)
+        logits[7] = 4.0
+        cold = {sample_token(logits, np.random.default_rng(0), 0.05)
+                for _ in range(50)}
+        assert cold == {7}
+        rng = np.random.default_rng(0)
+        hot = [sample_token(logits, rng, 4.0) for _ in range(300)]
+        assert 7 in hot
+        assert any(t != 7 for t in hot)
+        # determinism per seed: the testbed RNG is the only entropy
+        rng2 = np.random.default_rng(0)
+        assert hot == [sample_token(logits, rng2, 4.0)
+                       for _ in range(300)]
+
+    def test_windowed_serving_with_relay_plane(self, tiny):
+        """run_queue serves correctly off a relay-enabled gossip seeker
+        and surfaces relay totals in ServeMetrics."""
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(gossip_enabled=True, relay_enabled=True,
+                           gossip_seekers=4, anchor_shards=4,
+                           gossip_fanout=2, relay_fanout=2)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, gcfg=gcfg,
+                                  seed=0)
+        for _ in range(2):
+            srv.submit(np.arange(1, 9), max_new_tokens=3)
+        done = srv.run_queue()
+        assert all(len(r.output) == 3 for r in done)
+        assert srv.gossip.relay is not None
+        assert srv.gossip.relay.stats.rounds >= 1
+        assert done[0].metrics.relay_msgs > 0
+        assert done[0].metrics.relay_bytes > 0
 
     def test_repair_preserves_correct_output(self, tiny):
         """A repaired (swapped) chain must still compute the right tokens —

@@ -1,6 +1,10 @@
 """Gossip sync plane (repro.sync): delta protocol round-trips, seeker
 parity vs anchor-composed snapshots, scheduler fanout/anti-entropy,
-staleness-bounded routing, and partition recovery (PR 4)."""
+staleness-bounded routing, partition recovery (PR 4), and the epidemic
+seeker→seeker relay plane (PR 5)."""
+import gc
+import math
+
 import numpy as np
 import pytest
 
@@ -24,6 +28,7 @@ from repro.sync.gossip import (
     registry_shard_state,
     registry_version_vector,
 )
+from repro.sync.relay import RelayTopology
 from repro.sync.seeker import APPLIED, DUPLICATE, SeekerCache
 
 from _hyp import given, settings, st
@@ -630,3 +635,422 @@ class TestDeltaProperties:
                        for _ in range(int(rng.integers(1, 7)))]
                       for _ in range(int(rng.integers(1, 6)))]
             _run_mutation_script(script)
+
+
+# ---------------------------------------------------------------------------
+# Epidemic seeker→seeker relay (sync/relay.py)
+# ---------------------------------------------------------------------------
+
+
+def _relay_cfg(**kw):
+    base = dict(relay_enabled=True, relay_fanout=3, gossip_fanout=2,
+                gossip_hb_refresh_frac=0.5)
+    base.update(kw)
+    return GTRACConfig(**base)
+
+
+def _relay_plane(cfg, n_seekers=12, n=64, shards=8, seed=1):
+    reg = populate(ShardedAnchorRegistry(cfg, n_shards=shards), n=n,
+                   seed=seed)
+    pub, seekers, sched = make_sync_plane(reg, cfg, n_seekers=n_seekers,
+                                          now=0.0)
+    return reg, pub, seekers, sched
+
+
+def _churn(reg, rng, now, next_pid):
+    pids = list(reg.peers)
+    reg.set_trust(pids[int(rng.integers(len(pids)))],
+                  float(rng.uniform(0.3, 1.0)))
+    reg.apply_report(ExecReport(
+        True, pids[:3], [HopReport(p, 40.0, True) for p in pids[:3]]))
+    pid = next_pid[0]
+    next_pid[0] += 1
+    reg.register(pid, 0, 3, now=now, profile="golden")
+    reg.heartbeat(pid, now)
+
+
+class TestRelayTopology:
+    def test_deterministic_k_regular_no_self(self):
+        topo = RelayTopology(fanout=3, seed=5)
+        a = topo.neighbors(16, 2)
+        b = RelayTopology(fanout=3, seed=5).neighbors(16, 2)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+        for i, nb in enumerate(a):
+            assert len(nb) == 3
+            assert len(set(nb.tolist())) == 3
+            assert i not in nb
+            assert all(0 <= j < 16 for j in nb)
+        c = topo.neighbors(16, 3)   # rounds draw different samples
+        assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+    def test_small_populations_degenerate_cleanly(self):
+        topo = RelayTopology(fanout=4, seed=0)
+        assert [list(x) for x in topo.neighbors(1, 0)] == [[]]
+        for i, nb in enumerate(topo.neighbors(3, 0)):
+            assert sorted(nb.tolist()) == sorted(set(range(3)) - {i})
+
+
+class TestRelayPlane:
+    def test_anchor_fanout_constant_while_all_seekers_converge(self):
+        """The relay contract: anchor pushes stay at gossip_fanout per
+        round while every seeker converges within the epidemic bound."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg)
+        for pid in range(0, 64, 3):
+            reg.set_trust(pid, 0.6)
+        now, rounds = 0.0, 0
+        bound = math.ceil(math.log2(len(seekers))) + 2
+        while not sched.all_converged(now) and rounds < bound:
+            pushes0 = sched.stats.pushes
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(range(64), now)
+            sched.tick(now)
+            rounds += 1
+            assert sched.stats.pushes - pushes0 <= cfg.gossip_fanout
+        assert sched.all_converged(now, check_table=True), \
+            f"not converged after {rounds} rounds (bound {bound})"
+
+    def test_relay_converged_seekers_plan_bit_identical(self, gcfg):
+        """Relay-converged seekers (including ones that never talked to
+        the anchor after boot) plan bit-identically to anchor-composed
+        snapshots — RoutePlanner AND BatchRouter parity."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=8,
+                                                shards=4)
+        _mutate_registry(reg, 0.0)
+        now = 0.0
+        for _ in range(math.ceil(math.log2(8)) + 2):
+            now += cfg.gossip_period_s
+            reg.heartbeat_all([p for p in range(48) if p != 17], now)
+            reg.heartbeat(300, now)
+            sched.tick(now)
+            if sched.all_converged(now):
+                break
+        assert sched.all_converged(now, check_table=True)
+        ta = reg.snapshot(now)
+        pa = RoutePlanner(L, k_best=4)
+        _, plan_a = plan_route(ta, L, gcfg, tau=0.6, planner=pa)
+        assert plan_a.feasible
+        ra = BatchRouter(planner=RoutePlanner(L, k_best=4), cfg=gcfg,
+                         total_layers=L)
+        for rid, tau in enumerate([0.55, 0.7, 0.0]):
+            ra.submit(rid, tau)
+        plans_a = ra.route_window(ta)
+        for seeker in seekers:
+            ts = seeker.materialize(now)
+            assert_tables_equal(ta, ts)
+            ps = RoutePlanner(L, k_best=4)
+            _, plan_s = plan_route(ts, L, gcfg, tau=0.6, planner=ps)
+            assert plan_a.chain_rows == plan_s.chain_rows
+            assert plan_a.costs == plan_s.costs
+            rs = BatchRouter(planner=RoutePlanner(L, k_best=4), cfg=gcfg,
+                             total_layers=L)
+            for rid, tau in enumerate([0.55, 0.7, 0.0]):
+                rs.submit(rid, tau)
+            plans_s = rs.route_window(ts)
+            for rid in plans_a:
+                assert plans_a[rid].chain_rows == plans_s[rid].chain_rows
+                assert plans_a[rid].costs == plans_s[rid].costs
+
+    def test_duplicate_and_out_of_order_messages_absorbed(self):
+        """Replayed and stale relay messages are idempotent no-ops."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2,
+                                                shards=2, n=32)
+        s0, s1 = seekers
+        relay = sched.relay
+        pid0 = next(p for p in reg.peers if reg.owner_of(p) == 0)
+        # two update generations applied at s0 (and recorded for relay)
+        reg.set_trust(pid0, 0.5)
+        sched._ship(s0, 0, 1.0)
+        msg_old = relay.node(s0).message(1.0, cfg.node_ttl_s)
+        reg.set_trust(pid0, 0.7)
+        sched._ship(s0, 0, 2.0)
+        msg_new = relay.node(s0).message(2.0, cfg.node_ttl_s)
+        relay.deliver(msg_new, relay.node(s0), s1, 2.0)
+        assert s1.version_vector == s0.version_vector
+        vv = s1.version_vector
+        state = s1._states[0]
+        trust = state.trust.copy()
+        dup0 = relay.stats.duplicates
+        relay.deliver(msg_new, relay.node(s0), s1, 3.0)   # replay
+        relay.deliver(msg_old, relay.node(s0), s1, 3.0)   # out of order
+        assert s1.version_vector == vv
+        assert s1._states[0] is state                     # untouched
+        assert np.array_equal(s1._states[0].trust, trust)
+        assert relay.stats.duplicates > dup0
+        assert relay.stats.peer_full_syncs == 0
+
+    def test_relayed_chains_inherit_sender_staleness(self):
+        """A late-delivered relay chain must not reset the receiver's
+        staleness clock to the delivery time: the data is only as fresh
+        as the SENDER's last anchor confirmation, and a receiver still
+        behind the anchor has to keep routing on a discounted view."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2,
+                                                shards=2, n=32)
+        s0, s1 = seekers
+        pid0 = next(p for p in reg.peers if reg.owner_of(p) == 0)
+        reg.set_trust(pid0, 0.5)
+        sched._ship(s0, 0, 1.0)        # s0 confirmed shard 0 at t=1
+        msg = sched.relay.node(s0).message(1.0, cfg.node_ttl_s)
+        reg.set_trust(pid0, 0.9)       # anchor advances past the message
+        late = 1.0 + 10 * cfg.gossip_period_s
+        sched.relay.deliver(msg, sched.relay.node(s0), s1, late)
+        assert s1.version_vector[0] == msg.versions[0]   # chain applied
+        assert s1.version_vector[0] < registry_version_vector(reg)[0]
+        assert s1.staleness_rounds(late)[0] >= 9         # pre-fix: 0
+
+    def test_anchor_partitioned_seeker_converges_via_relay(self):
+        """The new scenario class: a seeker cut off from the anchor but
+        reachable by neighbors keeps converging — staleness stays
+        bounded and the mirror tracks churn the whole time."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg)
+        cut = seekers[0]
+        sched.partition(cut)               # anchor leg only
+        rng = np.random.default_rng(0)
+        next_pid = [1000]
+        now = 0.0
+        for _ in range(6):                 # burst of churn, still cut off
+            _churn(reg, rng, now, next_pid)
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+        max_stale = int(cut.staleness_rounds(now).max())
+        # epidemic drain: within the relay bound of the LAST churn the
+        # cut-off seeker must hold the anchor's exact state
+        for _ in range(math.ceil(math.log2(len(seekers))) + 2):
+            if sched.converged(cut, now):
+                break
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+        assert sched.converged(cut, now), \
+            "anchor-partitioned seeker failed to converge via relay"
+        # neighbors kept it roughly current even while churn was live
+        assert max_stale <= 3
+        # and the relay plane really carried it (no anchor contact)
+        assert sched.blocked_shards(cut) == set(range(pub.n_shards))
+
+    def test_partition_scenario_class_via_testbed(self):
+        """simulate_partition doubles as the relay scenario driver:
+        converged_during_partition reports the epidemic kept the cut-off
+        seeker current, and post-heal reconciliation is instant."""
+        cfg = _relay_cfg(gossip_stale_margin=0.02)
+        bed = build_scaling_testbed(96, cfg=cfg, seed=3, shards=4)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=8, now=bed.now)
+        pids = sorted(bed.peers)
+        calls = [0]
+
+        def churn(bed):
+            # churn the first windows, then let the epidemic drain: the
+            # during-partition convergence claim is "within the relay
+            # bound of the last burst", not "instantly every round"
+            calls[0] += 1
+            if calls[0] > 3:
+                return
+            chain = [int(p) for p in pids[:3]]
+            bed.anchor.apply_report(ExecReport(
+                True, chain, [HopReport(p, 60.0, True) for p in chain]))
+
+        stats = simulate_partition(bed, sched, seekers[0],
+                                   list(range(4)),   # ALL anchor shards
+                                   partition_windows=9, window_s=2.0,
+                                   mutate=churn)
+        assert stats.converged_during_partition
+        assert stats.converged
+        assert stats.rounds_to_convergence == 0
+        assert stats.max_stale_rounds <= 3
+        ta = bed.anchor.snapshot(bed.now)
+        assert_tables_equal(ta, seekers[0].materialize(bed.now))
+
+    def test_gap_repair_prefers_anchor_when_reachable(self):
+        """A receiver behind every chain base anti-entropies from the
+        anchor (the root of trust) when it can."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2,
+                                                shards=2, n=32)
+        s0 = seekers[0]
+        pid0 = next(p for p in reg.peers if reg.owner_of(p) == 0)
+        reg.set_trust(pid0, 0.5)
+        sched._ship(s0, 0, 1.0)
+        late = SeekerCache(cfg, 2, now=1.0)   # boot-empty: behind chains
+        sched.add_seeker(late)
+        msg = sched.relay.node(s0).message(1.0, cfg.node_ttl_s)
+        sched.relay.deliver(msg, sched.relay.node(s0), late, 1.0,
+                            anchor_pull=sched._relay_pull)
+        assert sched.relay.stats.anchor_repairs >= 1
+        assert sched.relay.stats.peer_full_syncs == 0
+        assert sched.converged(late, 1.0)
+
+    def test_gap_repair_falls_back_to_neighbor_mirror(self):
+        """The same gap with the anchor unreachable adopts the sender's
+        full shard mirror instead — and the adopted state aliases
+        neither the sender nor co-receivers."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2,
+                                                shards=2, n=32)
+        s0 = seekers[0]
+        pid0 = next(p for p in reg.peers if reg.owner_of(p) == 0)
+        reg.set_trust(pid0, 0.5)
+        sched._ship(s0, 0, 1.0)
+        sched._ship(s0, 1, 1.0)
+        late = SeekerCache(cfg, 2, now=1.0)
+        late2 = SeekerCache(cfg, 2, now=1.0)
+        sched.add_seeker(late)
+        sched.add_seeker(late2)
+        sched.partition(late)              # anchor unreachable
+        sched.partition(late2)
+        msg = sched.relay.node(s0).message(1.0, cfg.node_ttl_s)
+        for rx in (late, late2):
+            sched.relay.deliver(msg, sched.relay.node(s0), rx, 1.0,
+                                anchor_pull=sched._relay_pull)
+        assert sched.relay.stats.peer_full_syncs >= 2
+        assert late.version_vector == s0.version_vector
+        assert late2.version_vector == s0.version_vector
+        # no aliasing between sender mirror and the two adopted copies
+        assert late._states[0] is not s0._states[0]
+        assert late._states[0] is not late2._states[0]
+        hb_sender = s0._states[0].last_heartbeat.copy()
+        hb_peer = late2._states[0].last_heartbeat.copy()
+        late.refresh_heartbeats(0, np.full(len(hb_sender), 321.0), 9.0)
+        assert np.array_equal(s0._states[0].last_heartbeat, hb_sender)
+        assert np.array_equal(late2._states[0].last_heartbeat, hb_peer)
+
+    def test_relay_spreads_heartbeat_leases(self):
+        """Only seeds get anchor hb refreshes in relay mode; the lease
+        must reach non-seeds through the epidemic before node_ttl_s."""
+        cfg = _relay_cfg(gossip_fanout=1, relay_fanout=3)
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=8,
+                                                shards=2, n=32)
+        now = 0.0
+        # live peers heartbeat at the anchor; no shard versions move, so
+        # liveness can ONLY reach non-seed seekers via hb leases
+        for _ in range(10):
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(range(32), now)
+            sched.tick(now)
+        assert sched.relay.stats.hb_adopted > 0
+        for seeker in seekers:
+            assert seeker.materialize(now).alive.all(), \
+                "a seeker TTL-expired live peers (lease never arrived)"
+
+
+# ---------------------------------------------------------------------------
+# Gossip correctness regressions (the bugs the relay plane exposed)
+# ---------------------------------------------------------------------------
+
+
+class TestGossipRegressions:
+    def test_full_sync_adopt_does_not_alias_publisher_history(self, gcfg):
+        """Regression: the publisher stored the exported state in its
+        delta history AND shipped the same object in ShardDelta.full;
+        the seeker adopted it as its mirror, so an hb-refresh lease
+        rebinding the mirror's liveness column mutated the publisher's
+        delta base in place."""
+        reg = populate(ShardedAnchorRegistry(gcfg, n_shards=1))
+        pub = GossipPublisher(reg, gcfg)
+        seeker = SeekerCache(gcfg, 1, now=0.0)
+        d = pub.full(0)
+        assert seeker.apply(d, 0.0) == APPLIED
+        assert seeker._states[0] is not d.full      # defensive copy
+        v = registry_version_vector(reg)[0]
+        hist = pub._history[0][v]
+        hb_before = hist.last_heartbeat.copy()
+        # mutate the seeker mirror the way the hb-refresh lease does
+        assert seeker.refresh_heartbeats(
+            0, np.full(len(hist.peer_ids), 123.0), 5.0)
+        assert np.array_equal(hist.last_heartbeat, hb_before), \
+            "seeker mirror mutation leaked into the publisher history"
+        # the history entry still produces a correct delta base
+        reg.set_trust(1, 0.42)
+        d2 = pub.pull(0, v)
+        assert not d2.is_full
+        assert seeker.apply(d2, 6.0) == APPLIED
+        assert np.array_equal(seeker._states[0].trust,
+                              registry_shard_state(reg, 0).trust)
+
+    def test_sub_round_staleness_still_decays(self):
+        """Regression: the per-second gossip_stale_decay was gated on
+        the per-ROUND staleness being nonzero, so any staleness under
+        one gossip period skipped the documented decay-per-second law."""
+        cfg = GTRACConfig(init_trust=0.8, gossip_stale_decay=0.1)
+        reg = populate(ShardedAnchorRegistry(cfg, n_shards=2))
+        _, (seeker,), sched = make_sync_plane(reg, cfg, now=0.0)
+        now = 0.5 * cfg.gossip_period_s      # HALF a round stale
+        assert not seeker.staleness_rounds(now).any()
+        base = seeker.materialize(now)
+        adj = seeker.routing_view(now)
+        assert adj is not base               # pre-fix: base came back
+        f = np.exp(-0.1 * now)
+        expected = 0.8 + (base.trust - 0.8) * f
+        assert np.allclose(adj.trust, np.clip(expected, cfg.min_trust,
+                                              cfg.max_trust))
+
+    def test_margin_still_gates_on_whole_rounds(self):
+        """The round-denominated margin must NOT fire below one round —
+        only the per-second decay does."""
+        cfg = GTRACConfig(gossip_stale_margin=0.05)
+        reg = populate(ShardedAnchorRegistry(cfg, n_shards=2))
+        _, (seeker,), sched = make_sync_plane(reg, cfg, now=0.0)
+        now = 0.5 * cfg.gossip_period_s
+        assert seeker.routing_view(now) is seeker.materialize(now)
+
+    def test_partition_state_not_inherited_by_recreated_seeker(self, gcfg):
+        """Regression: _blocked was keyed by id(seeker); a
+        garbage-collected seeker's reused python id handed its partition
+        state to a brand-new seeker. Keyed by source_id now."""
+        reg = populate(ShardedAnchorRegistry(gcfg, n_shards=2))
+        pub, (s0,), sched = make_sync_plane(reg, gcfg, now=0.0)
+        old = SeekerCache(gcfg, 2, now=0.0)
+        sched.seekers.append(old)
+        sched.partition(old)
+        assert sched.blocked_shards(old) == {0, 1}
+        # deterministic: the key IS the stable source_id, not id()
+        assert set(sched._blocked) == {old.source_id}
+        old_pyid = id(old)
+        # drop the seeker WITHOUT scheduler hygiene (the crash path)
+        sched.seekers = [s for s in sched.seekers if s is not old]
+        del old
+        gc.collect()
+        reused = None
+        keep = []
+        for _ in range(256):
+            cand = SeekerCache(gcfg, 2, now=0.0)
+            if id(cand) == old_pyid:
+                reused = cand
+                break
+            keep.append(cand)
+        if reused is None:           # allocator didn't reuse the block
+            pytest.skip("CPython did not reuse the id in 256 allocs")
+        sched.seekers.append(reused)
+        assert sched.blocked_shards(reused) == set()   # pre-fix: {0, 1}
+        pushes0 = sched.stats.pushes
+        sched.tick(1.0)
+        assert sched.stats.pushes > pushes0
+        assert sched.converged(reused, 1.0, check_table=False)
+
+    def test_remove_seeker_drops_all_per_seeker_state(self, gcfg):
+        """Scheduler hygiene across drop/recreate cycles: partitions and
+        relay nodes die with their seeker."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=3,
+                                                shards=2, n=32)
+        victim = seekers[1]
+        sched.partition(victim, [0])
+        assert sched.blocked_shards(victim) == {0}
+        sched.relay.node(victim)     # materialize a relay node
+        sched.remove_seeker(victim)
+        assert victim not in sched.seekers
+        assert sched._blocked == {}
+        assert victim.source_id not in sched.relay._nodes
+        # a fresh replacement starts clean and syncs immediately
+        fresh = SeekerCache(cfg, 2, now=0.0)
+        sched.add_seeker(fresh)
+        assert sched.blocked_shards(fresh) == set()
+        reg.set_trust(next(iter(reg.peers)), 0.5)
+        for r in range(4):
+            sched.tick(1.0 + r)
+        assert sched.converged(fresh, 4.0, check_table=False)
