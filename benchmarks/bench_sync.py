@@ -22,10 +22,23 @@ What the dissemination plane buys (and what it must not cost):
   cost (and flat in the seeker count), while every seeker converges
   within ceil(log2 N) + 2 relay rounds of a burst of churn — the
   convergence bound and parity are asserted every run, quick included.
+* **Handshake lane** (PR 6, gated) — identical churn through the blind
+  push protocol and the digest handshake: the handshake's steady-state
+  seeker→seeker byte reduction must recover >= 90% of the
+  duplicate-delivery volume ``RelayStats.wasted_bytes`` measures on the
+  blind window, at unchanged convergence rounds. Honest lanes also
+  assert ZERO digest mismatches and ZERO quarantines (no
+  false-positive convictions).
+* **Byzantine lane** (PR 6, asserted every run, quick included) — with
+  F = relay_fanout - 1 lying relays fabricating delta chains and hb
+  leases (``sim/testbed.simulate_byzantine``), every honest seeker
+  reaches anchor parity within the epidemic bound, every fabricated
+  chain is rejected, liars are quarantined, and no honest mirror
+  resurrects the deregistered id.
 
 Emits BENCH_sync.json via benchmarks/common. Run with --quick for the CI
-smoke lane (tiny N, perf gates skipped; parity/convergence still
-asserted).
+smoke lane (tiny N, perf gates skipped; parity/convergence/Byzantine
+rejection still asserted).
 """
 from __future__ import annotations
 
@@ -41,7 +54,8 @@ from repro.configs.base import GTRACConfig
 from repro.core.planner import RoutePlanner, plan_route
 from repro.core.types import ExecReport, HopReport
 from repro.sim.peers import PROFILES, make_peer
-from repro.sim.testbed import build_scaling_testbed, simulate_partition
+from repro.sim.testbed import (build_scaling_testbed, simulate_byzantine,
+                               simulate_partition)
 from repro.sync.delta import make_delta, state_wire_bytes
 from repro.sync.gossip import make_sync_plane, registry_shard_state
 
@@ -125,7 +139,202 @@ def _relay_case(n_peers: int, n_seekers: int, shards: int, seed: int,
             "anchor_bytes_per_round": round(per_round, 1),
             "relay_msg_bytes": (sched.relay.stats.msg_bytes
                                 if sched.relay else 0),
-            "bed": bed, "seekers": seekers, "cfg": cfg}
+            "bed": bed, "seekers": seekers, "cfg": cfg, "sched": sched}
+
+
+def _honest_path_clean(sched, label: str) -> None:
+    """Honest-path safety: a lane with no liars must see zero digest
+    mismatches and zero quarantines (no false-positive convictions)."""
+    rs = sched.relay.stats
+    assert rs.digest_mismatches == 0, \
+        f"{label}: {rs.digest_mismatches} digest mismatches on honest path"
+    assert rs.quarantines == 0, \
+        f"{label}: {rs.quarantines} quarantines on honest path"
+
+
+def handshake_lane(n_peers: int, seed: int, quick: bool, results: dict):
+    """The digest-handshake gate: identical churn driven through the
+    blind-push wire protocol and the summary/pull handshake; the
+    handshake must cut steady-state seeker→seeker bytes by at least the
+    duplicate-delivery factor the blind window measures, without costing
+    convergence rounds."""
+    n_seekers = 16 if quick else 32
+    shards = 4 if quick else GATE_S
+    bound = math.ceil(math.log2(n_seekers)) + 2
+    steady = 8 if quick else 16
+    cases = {}
+    for handshake in (False, True):
+        cfg = GTRACConfig(gossip_fanout=RELAY_FANOUT, relay_enabled=True,
+                          relay_fanout=RELAY_FANOUT,
+                          relay_handshake=handshake)
+        bed = build_scaling_testbed(n_peers, cfg=cfg, seed=seed,
+                                    shards=shards)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=n_seekers,
+                                              now=bed.now)
+        rng = np.random.default_rng(seed)
+        pids = np.array(sorted(bed.peers), np.int64)
+        now = bed.now
+        # churn burst, then measure rounds to convergence
+        for _ in range(8):
+            chain = [int(p) for p in
+                     pids[rng.integers(0, len(pids), size=4)]]
+            bed.anchor.apply_report(ExecReport(
+                True, chain, [HopReport(p, 50.0, True) for p in chain]))
+        conv = -1
+        for rnd in range(1, bound + 1):
+            now += cfg.gossip_period_s
+            bed.anchor.heartbeat_all(list(bed.anchor.peers), now)
+            sched.tick(now)
+            if conv < 0 and sched.all_converged(now):
+                conv = rnd
+        assert sched.all_converged(now, check_table=True), \
+            f"handshake lane ({handshake=}): failed to converge"
+        # steady-state window under light churn (one report every other
+        # round): what the wire carries once everyone is caught up
+        rs = sched.relay.stats
+        w0 = (rs.seeker_wire_bytes(), rs.duplicates, rs.deltas_applied,
+              rs.wasted_bytes)
+        for rnd in range(steady):
+            if rnd % 2 == 0:
+                chain = [int(p) for p in
+                         pids[rng.integers(0, len(pids), size=4)]]
+                bed.anchor.apply_report(ExecReport(
+                    True, chain,
+                    [HopReport(p, 50.0, True) for p in chain]))
+            now += cfg.gossip_period_s
+            bed.anchor.heartbeat_all(list(bed.anchor.peers), now)
+            sched.tick(now)
+        _honest_path_clean(sched, f"handshake({handshake})")
+        cases[handshake] = {
+            "rounds_to_convergence": conv,
+            "steady_wire_bytes": rs.seeker_wire_bytes() - w0[0],
+            "steady_duplicates": rs.duplicates - w0[1],
+            "steady_deltas_applied": rs.deltas_applied - w0[2],
+            "steady_wasted_bytes": rs.wasted_bytes - w0[3],
+            "summaries": rs.summaries, "chain_pulls": rs.chain_pulls,
+        }
+    blind, hs = cases[False], cases[True]
+    # the duplicate-delivery factor the blind protocol pays: total wire
+    # over USEFUL wire in the steady window (wasted = duplicate chain
+    # deltas + unadopted lease columns, measured by RelayStats)
+    dup_factor = (blind["steady_wire_bytes"]
+                  / max(blind["steady_wire_bytes"]
+                        - blind["steady_wasted_bytes"], 1))
+    ratio = (blind["steady_wire_bytes"]
+             / max(hs["steady_wire_bytes"], 1))
+    # gate: the handshake's byte reduction must recover >= 90% of the
+    # duplicate-delivery volume the blind window measured (the sliver it
+    # cannot recover is the summary leg's own framing — the price of
+    # knowing what not to send), at unchanged convergence rounds
+    saved = blind["steady_wire_bytes"] - hs["steady_wire_bytes"]
+    recovery = saved / max(blind["steady_wasted_bytes"], 1)
+    gate_ok = (recovery >= 0.9
+               and hs["rounds_to_convergence"] <= bound
+               and 0 < hs["rounds_to_convergence"]
+               <= max(blind["rounds_to_convergence"], 1))
+    emit(f"sync/handshake/steady_bytes_ratio/N{n_seekers}seekers", ratio,
+         f"blind{blind['steady_wire_bytes']}B/"
+         f"hs{hs['steady_wire_bytes']}B_dupfactor{dup_factor:.1f}")
+    emit(f"sync/handshake/duplicate_recovery/N{n_seekers}seekers",
+         recovery, f"{recovery * 100:.1f}%_of_"
+         f"{blind['steady_wasted_bytes']}B_waste_recovered")
+    emit(f"sync/handshake/rounds_to_convergence/N{n_seekers}seekers",
+         float(hs["rounds_to_convergence"]),
+         f"{hs['rounds_to_convergence']}rounds_vs_blind"
+         f"{blind['rounds_to_convergence']}")
+    results["handshake"] = {
+        "n_seekers": n_seekers, "shards": shards,
+        "steady_rounds": steady,
+        "blind": blind, "handshake": hs,
+        "dup_factor": round(dup_factor, 3),
+        "bytes_ratio": round(ratio, 3),
+        "duplicate_recovery": round(recovery, 4),
+        "gate_recovers_duplicate_volume": bool(gate_ok),
+    }
+    return gate_ok
+
+
+def byzantine_lane(n_peers: int, seed: int, quick: bool, results: dict):
+    """The Byzantine gate, asserted every run (quick included): with
+    F = relay_fanout - 1 lying relays fabricating chains and leases,
+    every honest seeker must reach anchor parity within the epidemic
+    bound, every fabricated chain must be rejected, and no honest
+    mirror may carry the resurrected id. Plan parity on the honest
+    seekers doubles as the SSR envelope: bit-identical tables route
+    bit-identically to the liar-free baseline."""
+    n_seekers = 16 if quick else 32
+    shards = 4 if quick else GATE_S
+    n_liars = RELAY_FANOUT - 1
+    lanes = {}
+    for handshake in (True, False):
+        cfg = GTRACConfig(gossip_fanout=RELAY_FANOUT, relay_enabled=True,
+                          relay_fanout=RELAY_FANOUT,
+                          relay_handshake=handshake)
+        bed = build_scaling_testbed(n_peers, cfg=cfg, seed=seed,
+                                    shards=shards)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=n_seekers,
+                                              now=bed.now)
+        rng = np.random.default_rng(seed)
+        next_pid = [max(bed.peers) + 1]
+
+        def churn(bed):
+            pids = np.array(sorted(bed.anchor.peers), np.int64)
+            chain = [int(p) for p in
+                     pids[rng.integers(0, len(pids), size=4)]]
+            bed.anchor.apply_report(ExecReport(
+                True, chain, [HopReport(p, 50.0, True) for p in chain]))
+            pid = next_pid[0]
+            next_pid[0] += 1
+            bed.peers[pid] = make_peer(pid, 0, 3, PROFILES["golden"],
+                                       bed.rng)
+            bed.anchor.register(pid, 0, 3, now=bed.now, profile="golden")
+            bed.anchor.heartbeat(pid, bed.now)
+
+        st = simulate_byzantine(bed, sched, seekers, n_liars=n_liars,
+                                churn_windows=5,
+                                window_s=cfg.gossip_period_s,
+                                mutate=churn)
+        mode = "handshake" if handshake else "blind"
+        assert st.honest_converged, \
+            f"byzantine/{mode}: honest seekers failed to converge"
+        assert st.poisoned_mirrors == 0, \
+            f"byzantine/{mode}: {st.poisoned_mirrors} poisoned mirrors"
+        assert st.resurrected_seen == 0, \
+            (f"byzantine/{mode}: deregistered id {st.resurrect_pid} "
+             f"resurrected on an honest mirror")
+        assert st.quarantines > 0, \
+            f"byzantine/{mode}: no liar was ever convicted"
+        if not handshake:
+            # blind mode delivers the fabricated chains themselves;
+            # every one must have been rolled back
+            assert st.rejected_chains > 0, \
+                "byzantine/blind: no fabricated chain was rejected"
+        # SSR envelope proxy: honest tables plan bit-identically to the
+        # anchor, hence identically to the liar-free baseline
+        liars = set(sk.source_id for sk in seekers[1:1 + n_liars])
+        honest = [sk for sk in seekers if sk.source_id not in liars]
+        for sk in (honest[0], honest[-1]):
+            assert_parity(bed, sk, cfg, f"byzantine/{mode}")
+        lanes[mode] = {
+            "fabricated_summaries": st.fabricated_summaries,
+            "fabricated_msgs": st.fabricated_msgs,
+            "rounds_to_convergence": st.rounds_to_convergence,
+            "rejected_chains": st.rejected_chains,
+            "digest_mismatches": st.digest_mismatches,
+            "quarantines": st.quarantines,
+            "quarantine_drops": st.quarantine_drops,
+            "deferred_unattested": st.deferred_unattested,
+            "hb_rejected": st.hb_rejected,
+            "resurrect_pid": st.resurrect_pid,
+        }
+        emit(f"sync/byzantine/{mode}/rounds_to_convergence",
+             float(st.rounds_to_convergence),
+             f"{st.rounds_to_convergence}rounds_F{n_liars}liars_"
+             f"{st.quarantines}quarantines")
+    results["byzantine"] = {"n_seekers": n_seekers, "shards": shards,
+                            "n_liars": n_liars, **lanes}
 
 
 def relay_lane(n_peers: int, seed: int, quick: bool, results: dict):
@@ -145,6 +354,7 @@ def relay_lane(n_peers: int, seed: int, quick: bool, results: dict):
     # parity re-asserted on relay-converged seekers (first + last)
     for sk in (r["seekers"][0], r["seekers"][-1]):
         assert_parity(r["bed"], sk, r["cfg"], f"relay{n_seekers}")
+    _honest_path_clean(r["sched"], f"relay{n_seekers}")
     # flatness probe: a quarter of the seekers must cost the anchor
     # about the same bytes/round (the relay plane's whole point) —
     # measured over the SAME round window so lease cycles amortize
@@ -183,6 +393,15 @@ def relay_lane(n_peers: int, seed: int, quick: bool, results: dict):
         "relay_msg_bytes_total": r["relay_msg_bytes"],
         "gate_anchor_le_direct8": bool(gate_ok),
     }
+    # hardening counters surfaced alongside the lane they audit — on
+    # this honest lane the mismatch/quarantine columns must read zero
+    rs = r["sched"].relay.stats
+    results["relay"].update({
+        "duplicates": rs.duplicates,
+        "digest_mismatches": rs.digest_mismatches,
+        "rejected_chains": rs.rejected_chains,
+        "quarantines": rs.quarantines,
+    })
     return gate_ok
 
 
@@ -309,6 +528,11 @@ def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
     #    asserted even in --quick, byte gate enforced on real runs) ----------
     relay_ok = relay_lane(n_peers, seed, quick, results)
 
+    # -- digest handshake (wire-cost gate) + Byzantine lane (correctness
+    #    gates asserted every run, quick included) ---------------------------
+    hs_ok = handshake_lane(n_peers, seed, quick, results)
+    byzantine_lane(n_peers, seed, quick, results)
+
     # -- gate ---------------------------------------------------------------
     frac = results[f"S{GATE_S}"]["delta_frac"]
     gate_ok = frac <= GATE_FRAC
@@ -324,6 +548,7 @@ def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
         # only the real (gated) measurement may claim the verdict keys
         extra["gate_delta_le_10pct"] = bool(gate_ok)
         extra["gate_relay_anchor_le_direct8"] = bool(relay_ok)
+        extra["gate_handshake_bytes"] = bool(hs_ok)
     write_json("BENCH_sync.quick.json" if quick else "BENCH_sync.json",
                prefix="sync/", extra=extra)
     if not quick and not gate_ok:
@@ -339,6 +564,15 @@ def run(n_peers: int = 1000, trials: int = 100, seed: int = 0,
               f"{DIRECT_BASELINE_SEEKERS}-seeker direct-push cost "
               f"{r['direct8_anchor_bytes_per_round']:.0f}B",
               file=sys.stderr)
+        sys.exit(1)
+    if not quick and not hs_ok:
+        h = results["handshake"]
+        print(f"GATE FAILED: handshake recovered only "
+              f"{h['duplicate_recovery'] * 100:.1f}% of the blind "
+              f"protocol's duplicate-delivery volume (need >= 90%), "
+              f"or convergence regressed "
+              f"(ratio {h['bytes_ratio']:.2f}x, duplicate-delivery "
+              f"factor {h['dup_factor']:.2f}x)", file=sys.stderr)
         sys.exit(1)
 
 

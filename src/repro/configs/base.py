@@ -331,6 +331,20 @@ class GTRACConfig:
     relay_fanout: int = 2
     relay_history: int = 8
     relay_seed: int = 0
+    # Byzantine hardening of the relay plane (core/digest.py,
+    # sync/relay.py): every anchor sighting carries per-shard state
+    # digests keyed by sync_digest_seed; with relay_verify on, receivers
+    # stage relayed chains, verify the resulting mirror digest against
+    # the freshest attested digest at that version, and on mismatch roll
+    # back, quarantine the sender for relay_quarantine_rounds relay
+    # rounds, and anti-entropy repair from the anchor. relay_handshake
+    # replaces blind chain-push with a summary/pull/response handshake
+    # (push version vectors + digests, ship only what the receiver
+    # lacks) — steady-state seeker->seeker traffic shrinks to summaries.
+    relay_verify: bool = True
+    relay_handshake: bool = True
+    relay_quarantine_rounds: int = 8
+    sync_digest_seed: int = 0x5EED
 
 
 def asdict(cfg) -> dict:

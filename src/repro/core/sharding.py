@@ -154,6 +154,11 @@ class ShardedAnchorRegistry:
         self._topo_key: Optional[Tuple[int, ...]] = None
         self._perm: Optional[np.ndarray] = None
         self._perm_key: Optional[Tuple[int, ...]] = None
+        # per-shard content digests (core/digest.py) cached against each
+        # shard's version; computed over export_shard_state — i.e. with
+        # the GLOBAL seq column, the same rows a seeker mirrors
+        self._digests: List[Optional[int]] = [None] * self.n_shards
+        self._digest_keys: List[int] = [-1] * self.n_shards
 
     # -- placement -----------------------------------------------------------
 
@@ -418,6 +423,29 @@ class ShardedAnchorRegistry:
         st.seq = np.fromiter((self._seq[int(p)] for p in st.peer_ids),
                              np.int64, len(st.peer_ids))
         return st
+
+    def shard_digest(self, shard: int) -> int:
+        """One shard's content digest over the state a seeker mirrors
+        (``export_shard_state``: shard rows + global seq). The inner
+        ``AnchorRegistry.state_digest`` digests the shard's LOCAL seq
+        stamps, which a mirror never sees — so the sharded registry
+        keeps its own per-shard digest cache keyed on shard version."""
+        sh = self.shards[shard]
+        key = sh.version
+        if self._digests[shard] is not None \
+                and self._digest_keys[shard] == key:
+            return self._digests[shard]
+        from repro.core.digest import state_digest
+        d = state_digest(self.export_shard_state(shard),
+                         self.cfg.sync_digest_seed)
+        self._digests[shard] = d
+        self._digest_keys[shard] = key
+        return d
+
+    def digest_vector(self) -> Tuple[int, ...]:
+        """Per-shard digests, aligned with ``version_vector`` — the
+        attestation payload digest-verified gossip pushes to seekers."""
+        return tuple(self.shard_digest(s) for s in range(self.n_shards))
 
     def adopt_shard_state(self, shard: int, state: RegistryState) -> None:
         """Replace one shard's contents from a replicated per-shard state

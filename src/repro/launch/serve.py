@@ -84,6 +84,21 @@ def main(argv=None):
     ap.add_argument("--relay-seed", type=int, default=0,
                     help="relay topology RNG seed (deterministic "
                          "per-round neighbor sampling)")
+    ap.add_argument("--relay-blind", action="store_true",
+                    help="disable the digest handshake: push whole "
+                         "delta-chain messages to every neighbor "
+                         "instead of summary/pull (the pre-handshake "
+                         "wire protocol — more duplicate bytes)")
+    ap.add_argument("--relay-no-verify", action="store_true",
+                    help="disable digest verification, quarantine and "
+                         "hb plausibility checks on relayed payloads "
+                         "(trust every neighbor — the pre-hardening "
+                         "behavior)")
+    ap.add_argument("--relay-quarantine-rounds", type=int, default=None,
+                    metavar="R",
+                    help="relay rounds a convicted lying sender stays "
+                         "quarantined per receiver (default: "
+                         "GTRACConfig.relay_quarantine_rounds)")
     args = ap.parse_args(argv)
     if args.windowed and args.algorithm != "gtrac":
         ap.error("--windowed routes via the gtrac batch router; "
@@ -119,6 +134,8 @@ def main(argv=None):
     gossip_kw = {}
     if args.gossip_period is not None:
         gossip_kw["gossip_period_s"] = args.gossip_period
+    if args.relay_quarantine_rounds is not None:
+        gossip_kw["relay_quarantine_rounds"] = args.relay_quarantine_rounds
     gcfg = GTRACConfig(anchor_shards=args.shards, shard_by=args.shard_by,
                        hedge_enabled=args.hedged,
                        gossip_enabled=args.gossip,
@@ -129,6 +146,8 @@ def main(argv=None):
                        relay_fanout=args.relay_fanout,
                        relay_history=args.relay_history,
                        relay_seed=args.relay_seed,
+                       relay_handshake=not args.relay_blind,
+                       relay_verify=not args.relay_no_verify,
                        gossip_seekers=(args.relay_seekers if args.relay
                                        else 1),
                        **gossip_kw)
@@ -165,10 +184,17 @@ def main(argv=None):
                 rs = srv.gossip.relay.stats
                 print(f"relay: {args.relay_seekers} seekers, "
                       f"{rs.msgs} msgs ({rs.msg_bytes} B), "
+                      f"{rs.summaries} summaries ({rs.summary_bytes} B), "
                       f"{rs.deltas_applied} deltas applied, "
+                      f"{rs.duplicates} duplicates, "
                       f"{rs.gaps} gaps ({rs.anchor_repairs} anchor / "
                       f"{rs.peer_full_syncs} peer repairs), "
                       f"anchor bytes {g.anchor_bytes()} B")
+                print(f"relay hardening: {rs.digest_mismatches} digest "
+                      f"mismatches, {rs.rejected_chains} rejected "
+                      f"chains, {rs.quarantines} quarantines "
+                      f"({rs.quarantine_drops} drops), "
+                      f"{rs.hb_rejected} hb rejections")
         return
     ok = 0
     for rid in range(args.requests):

@@ -113,9 +113,16 @@ class ServeMetrics:
     # staleness (in gossip rounds) seen while this stream was active
     stale_rounds_max: int = 0
     # relay serving (cfg.relay_enabled): cumulative relay-plane totals
-    # (messages delivered / measured wire bytes) at stream completion
+    # (payloads delivered — data messages AND handshake summaries — and
+    # measured seeker→seeker wire bytes) at stream completion
     relay_msgs: int = 0
     relay_bytes: int = 0
+    # Byzantine hardening (cfg.relay_verify): duplicate deliveries the
+    # handshake suppresses, plus the digest-verification outcome totals
+    relay_duplicates: int = 0
+    relay_digest_mismatches: int = 0
+    relay_rejected_chains: int = 0
+    relay_quarantines: int = 0
 
 
 @dataclass
@@ -286,8 +293,12 @@ class GTRACPipelineServer:
         """Surface cumulative relay-plane totals on a stream's metrics."""
         if self.gossip is not None and self.gossip.relay is not None:
             rs = self.gossip.relay.stats
-            metrics.relay_msgs = rs.msgs
-            metrics.relay_bytes = rs.msg_bytes + rs.peer_full_bytes
+            metrics.relay_msgs = rs.msgs + rs.summaries
+            metrics.relay_bytes = rs.seeker_wire_bytes()
+            metrics.relay_duplicates = rs.duplicates
+            metrics.relay_digest_mismatches = rs.digest_mismatches
+            metrics.relay_rejected_chains = rs.rejected_chains
+            metrics.relay_quarantines = rs.quarantines
 
     # -- window-batched serving (the batch router path) ------------------------
 

@@ -67,6 +67,17 @@ def registry_shard_state(registry, shard: int) -> RegistryState:
     return registry.export_state()
 
 
+def registry_shard_digest(registry, shard: int) -> int:
+    """One shard's content digest (core/digest.py) — the attestation
+    digest-verified gossip pushes alongside the version vector."""
+    if isinstance(registry, ShardedAnchorRegistry):
+        return registry.shard_digest(shard)
+    if shard != 0:
+        raise ValueError(f"monolithic registry has only shard 0, "
+                         f"got {shard}")
+    return registry.state_digest()
+
+
 def registry_shard_heartbeats(registry, shard: int) -> np.ndarray:
     """One shard's fresh liveness column (the hb-refresh payload)."""
     if isinstance(registry, ShardedAnchorRegistry):
@@ -101,6 +112,10 @@ class GossipStats:
     hb_refreshes: int = 0     # heartbeat-column lease renewals accepted
     hb_bytes: int = 0
     hb_refresh_dropped: int = 0   # renewals the seeker could not take
+    digest_mismatches: int = 0    # anchor-leg ships whose resulting
+                                  # mirror digest contradicted the
+                                  # publisher's (poisoned base), each
+                                  # repaired by a forced full resync
 
     def anchor_bytes(self) -> int:
         """Total bytes the ANCHOR shipped (deltas + full syncs + hb
@@ -164,6 +179,16 @@ class GossipPublisher:
         heartbeat traffic)."""
         return registry_shard_heartbeats(self.registry, shard)
 
+    def digest(self, shard: int) -> int:
+        """One shard's current content digest (registry-cached per
+        version)."""
+        return registry_shard_digest(self.registry, shard)
+
+    def digest_vector(self) -> Tuple[int, ...]:
+        """Per-shard digests aligned with ``version_vector()`` — what
+        anchor sightings attest to seekers."""
+        return tuple(self.digest(s) for s in range(self.n_shards))
+
 
 class GossipScheduler:
     """Round-driver between one publisher and its subscribed seekers.
@@ -193,6 +218,12 @@ class GossipScheduler:
         # hand its partition state to a fresh seeker
         self._blocked: Dict[int, Set[int]] = {}
         self.stats = GossipStats()
+        # digest verification of the anchor leg: after every ship the
+        # seeker's (incrementally maintained) mirror digest must equal
+        # the publisher's — a mismatch means the base was poisoned
+        # (unattested optimistic relay adoption) and forces a full
+        # resync. Same master switch as the relay plane's verification.
+        self.verify = bool(cfg.relay_verify)
         relay_on = cfg.relay_enabled if relay is None else bool(relay)
         self.relay: Optional[RelayPlane] = (RelayPlane(cfg)
                                             if relay_on else None)
@@ -251,12 +282,16 @@ class GossipScheduler:
 
     def maybe_tick(self, now: float) -> bool:
         """Catch the cadence up to ``now``: run one round per elapsed
-        ``gossip_period_s`` (capped at ``MAX_CATCHUP_ROUNDS``), exactly
-        the rounds a background sync thread would have fired while a
-        sim driver stalled inside a long request. Matters most on the
-        relay plane, where information moves one hop per ROUND — a
-        single round per multi-period stall would let relayed
-        observation times (and so staleness) lag arbitrarily."""
+        ``gossip_period_s`` (capped at ``MAX_CATCHUP_ROUNDS``), the
+        rounds a background sync thread would have fired while a sim
+        driver stalled inside a long request. Matters most on the relay
+        plane, where information moves one hop per ROUND — a single
+        round per multi-period stall would let relayed observation
+        times (and so staleness) lag arbitrarily. Every catch-up round
+        runs AT ``now``: the registry reads genuinely happen now, and
+        back-dating their stamps would make present-time heartbeat
+        data look future-dated to the relay plane's plausibility
+        checks (honest lease columns rejected as fabrications)."""
         if self._last_round is None or self.period_s <= 0:
             # no cadence (period 0 = tick every call), or first round
             self.tick(now)
@@ -264,9 +299,8 @@ class GossipScheduler:
         missed = int((now - self._last_round) / self.period_s)
         if missed <= 0:
             return False
-        missed = min(missed, self.MAX_CATCHUP_ROUNDS)
-        for i in range(missed, 0, -1):
-            self.tick(now - (i - 1) * self.period_s)
+        for _ in range(min(missed, self.MAX_CATCHUP_ROUNDS)):
+            self.tick(now)
         return True
 
     def tick(self, now: float) -> None:
@@ -291,8 +325,13 @@ class GossipScheduler:
             # O(fanout seekers), and a fully-fresh seed is what makes
             # the epidemic converge in O(log N) rounds
             targets, shard_cap = self._seed_seekers(n), n
+        # the attestation payload riding every anchor sighting
+        # (registry-cached per shard version — O(S) on clean rounds)
+        dv = (self.publisher.digest_vector()
+              if self.relay is not None else None)
         for seeker in targets:
-            self._anchor_round(seeker, vv, n, now, refresh_s, shard_cap)
+            self._anchor_round(seeker, vv, dv, n, now, refresh_s,
+                               shard_cap)
         if self.relay is not None:
             self.relay.round(self.seekers, now,
                              anchor_pull=self._relay_pull)
@@ -315,8 +354,8 @@ class GossipScheduler:
         return seeds
 
     def _anchor_round(self, seeker: SeekerCache, vv: Tuple[int, ...],
-                      n: int, now: float, refresh_s: float,
-                      shard_cap: int) -> None:
+                      dv: Optional[Tuple[int, ...]], n: int, now: float,
+                      refresh_s: float, shard_cap: int) -> None:
         """The anchor→seeker leg for one seeker: version-vector push,
         stalest-first dirty pulls up to ``shard_cap``, hb-lease renewal."""
         blocked = self._blocked.get(seeker.source_id, ())
@@ -326,9 +365,9 @@ class GossipScheduler:
         dirty = seeker.observe(vv, now, reachable=reachable)
         self.stats.pushes += 1
         if self.relay is not None:
-            # a direct push is an authoritative vv sighting the seeker
-            # will relay onward (with its observation time)
-            self.relay.observe_anchor(seeker, vv, now)
+            # a direct push is an authoritative vv + digest sighting the
+            # seeker will relay onward (with its observation time)
+            self.relay.observe_anchor(seeker, vv, now, digests=dv)
         ages = seeker.staleness(now)
         dirty.sort(key=lambda s: -ages[s])    # stalest first
         take, defer = dirty[:shard_cap], dirty[shard_cap:]
@@ -362,6 +401,16 @@ class GossipScheduler:
         return True
 
     def _ship(self, seeker: SeekerCache, shard: int, now: float) -> None:
+        if self.relay is not None:
+            # a ship IS direct anchor contact: refresh the seeker's
+            # attestation store first, so what it is about to apply —
+            # and then forward — is covered by a sighting it can relay
+            # (the invariant that keeps honest chains from ever being
+            # deferred as unattested downstream)
+            self.relay.observe_anchor(seeker,
+                                      self.publisher.version_vector(),
+                                      now,
+                                      digests=self.publisher.digest_vector())
         delta = self.publisher.pull(shard, seeker.version_vector[shard])
         try:
             seeker.apply(delta, now)
@@ -376,8 +425,21 @@ class GossipScheduler:
         else:
             self.stats.deltas += 1
             self.stats.delta_bytes += delta.wire_bytes()
-            if self.relay is not None:
-                self.relay.record(seeker, delta)
+        if self.verify and \
+                seeker.shard_digest(shard) != self.publisher.digest(shard):
+            # the shipped-to mirror contradicts the root of trust: its
+            # base was poisoned (optimistic relay adoption before any
+            # attestation covered it). A same-version full ship cannot
+            # repair this — the version contract assumes identical rows
+            # — so the mirror is invalidated and re-adopted wholesale.
+            self.stats.digest_mismatches += 1
+            seeker.invalidate_shard(shard)
+            full = self.publisher.full(shard)
+            seeker.apply(full, now)
+            self.stats.full_syncs += 1
+            self.stats.full_bytes += full.wire_bytes()
+        elif not delta.is_full and self.relay is not None:
+            self.relay.record(seeker, delta)
 
     # -- anti-entropy --------------------------------------------------------
 
@@ -394,9 +456,10 @@ class GossipScheduler:
             total += delta.wire_bytes()
         self.stats.full_bytes += total
         if self.relay is not None:
-            # direct anchor contact: an authoritative vv sighting
+            # direct anchor contact: an authoritative vv + digest sighting
             self.relay.observe_anchor(
-                seeker, self.publisher.version_vector(), now)
+                seeker, self.publisher.version_vector(), now,
+                digests=self.publisher.digest_vector())
         return total
 
     # -- convergence ---------------------------------------------------------

@@ -37,6 +37,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import GTRACConfig
+from repro.core.digest import empty_digest, state_digest, xor_rows
 from repro.core.registry import _REGISTRY_IDS
 from repro.core.types import PeerTable, RegistryState
 from repro.sync.delta import (
@@ -45,6 +46,7 @@ from repro.sync.delta import (
     apply_delta,
     copy_state,
     empty_state,
+    slice_state,
 )
 
 APPLIED = "applied"
@@ -80,6 +82,14 @@ class SeekerCache:
         self._states: List[RegistryState] = [empty_state()
                                              for _ in range(self.n_shards)]
         self._versions: List[int] = [-1] * self.n_shards
+        # per-shard mirror content digests (core/digest.py), maintained
+        # INCREMENTALLY on delta application — O(changed rows), XOR out
+        # dropped row hashes, XOR in upserted ones — and from scratch on
+        # full-snapshot adoption. The relay plane verifies these against
+        # anchor-attested digests at matching versions.
+        self._digest_seed = int(cfg.sync_digest_seed)
+        self._digests: List[int] = [empty_digest(self._digest_seed)
+                                    for _ in range(self.n_shards)]
         self._synced_at = np.full(self.n_shards, float(now))
         # when each shard last received its WHOLE heartbeat column (full
         # sync or hb refresh) — deltas only carry changed rows' hb, so
@@ -185,10 +195,23 @@ class SeekerCache:
             # the mirror content is untouched, every table cache survives
             return APPLIED
         old = self._states[s]
-        # full snapshots are adopted as a COPY — the wire object aliases
-        # the publisher's history entry and every co-receiver's payload
-        new = (copy_state(delta.full) if delta.is_full
-               else apply_delta(old, delta))
+        if delta.is_full:
+            # full snapshots are adopted as a COPY — the wire object
+            # aliases the publisher's history entry and every
+            # co-receiver's payload — and reset the digest from scratch
+            new = copy_state(delta.full)
+            self._digests[s] = state_digest(new, self._digest_seed)
+        else:
+            # incremental digest maintenance, O(changed rows): XOR out
+            # the hashes of rows this delta drops (removed or replaced),
+            # XOR in the upserted rows' hashes (core/digest.py)
+            rows = delta.rows if delta.rows is not None else empty_state()
+            drop = np.concatenate([delta.removed_ids, rows.peer_ids])
+            dropped = np.nonzero(np.isin(old.peer_ids, drop))[0]
+            self._digests[s] ^= (
+                xor_rows(slice_state(old, dropped), self._digest_seed)
+                ^ xor_rows(rows, self._digest_seed))
+            new = apply_delta(old, delta)
         self._states[s] = new
         self._dirty = True
         if not (np.array_equal(old.peer_ids, new.peer_ids)
@@ -238,6 +261,49 @@ class SeekerCache:
     def hb_stamp(self, shard: int) -> float:
         """When this shard's liveness column was last refreshed whole."""
         return float(self._hb_at[shard])
+
+    def shard_digest(self, shard: int) -> int:
+        """This shard mirror's content digest (incrementally maintained
+        — see ``apply``). Equals the anchor's ``state_digest`` /
+        ``shard_digest`` whenever the mirror is honest and at the same
+        version; the relay plane quarantines senders whose chains break
+        that equality."""
+        return self._digests[shard]
+
+    def checkpoint(self, shard: int) -> tuple:
+        """Snapshot one shard's adoption-relevant state so a relay
+        receiver can STAGE a neighbor's chain, verify the resulting
+        digest, and roll back cleanly on mismatch (``restore``). Cheap:
+        the state object is immutable-by-contract under ``apply`` (every
+        application rebinds a new object), so the token holds references
+        plus scalars — no column copies."""
+        return (self._states[shard], self._versions[shard],
+                self._digests[shard], float(self._synced_at[shard]),
+                float(self._hb_at[shard]), self._dirty, self._topo_dirty)
+
+    def invalidate_shard(self, shard: int) -> None:
+        """Throw one shard's mirror away (digest verification found it
+        poisoned): back to the boot state, so the next full snapshot
+        adopts from scratch instead of hitting the same-version
+        rows-are-identical fast path — a poisoned mirror at the anchor's
+        version is exactly the case that contract cannot see. Staleness
+        clocks are left untouched; the shard is *worse* than stale until
+        repaired."""
+        self._states[shard] = empty_state()
+        self._versions[shard] = -1
+        self._digests[shard] = empty_digest(self._digest_seed)
+        self._dirty = True
+        self._topo_dirty = True
+
+    def restore(self, shard: int, token: tuple) -> None:
+        """Roll one shard back to a ``checkpoint`` token — the reject
+        path of digest-verified adoption. Table/composition caches are
+        keyed on generations that only move in ``materialize``, so
+        un-materialized staged state unwinds completely."""
+        (self._states[shard], self._versions[shard], self._digests[shard],
+         synced_at, hb_at, self._dirty, self._topo_dirty) = token
+        self._synced_at[shard] = synced_at
+        self._hb_at[shard] = hb_at
 
     # -- staleness -----------------------------------------------------------
 

@@ -1,0 +1,598 @@
+"""Digest-verified epidemic gossip (PR 6): rolling shard digests,
+the summary/pull handshake, Byzantine relay hardening (fabricated-chain
+rejection, quarantine, anti-entropy repair), and the lying-seeker
+scenario class in sim/testbed.py."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.core.digest import empty_digest, mix64, state_digest
+from repro.core.registry import AnchorRegistry
+from repro.core.sharding import ShardedAnchorRegistry
+from repro.core.types import ExecReport, HopReport
+from repro.sim.testbed import (
+    build_scaling_testbed,
+    make_liar_hook,
+    simulate_byzantine,
+    simulate_partition,
+)
+from repro.sync.delta import ShardDelta, empty_state, slice_state
+from repro.sync.gossip import make_sync_plane, registry_shard_state
+from repro.sync.seeker import SeekerCache
+
+from _hyp import given, settings, st
+
+SEED = 0x5EED
+
+
+def populate(reg, n=48, seed=1, now=0.0):
+    rng = np.random.default_rng(seed)
+    for pid in range(n):
+        s = (pid % 4) * 3
+        reg.register(pid, s, s + 3, now=now, profile="golden",
+                     trust=float(rng.uniform(0.5, 1.0)),
+                     latency_ms=float(rng.uniform(10, 300)))
+        reg.heartbeat(pid, now)
+    return reg
+
+
+def _relay_cfg(**kw):
+    base = dict(relay_enabled=True, relay_fanout=3, gossip_fanout=2,
+                gossip_hb_refresh_frac=0.5)
+    base.update(kw)
+    return GTRACConfig(**base)
+
+
+def _relay_plane(cfg, n_seekers=6, n=48, shards=4, seed=1):
+    reg = populate(ShardedAnchorRegistry(cfg, n_shards=shards), n=n,
+                   seed=seed)
+    pub, seekers, sched = make_sync_plane(reg, cfg, n_seekers=n_seekers,
+                                          now=0.0)
+    return reg, pub, seekers, sched
+
+
+def _churn(reg, rng, now, next_pid):
+    pids = list(reg.peers)
+    reg.set_trust(pids[int(rng.integers(len(pids)))],
+                  float(rng.uniform(0.3, 1.0)))
+    reg.apply_report(ExecReport(
+        True, pids[:3], [HopReport(p, 40.0, True) for p in pids[:3]]))
+    pid = next_pid[0]
+    next_pid[0] += 1
+    reg.register(pid, 0, 3, now=now, profile="golden")
+    reg.heartbeat(pid, now)
+
+
+def _fake_delta(receiver, shard, new_version, trust=1.0):
+    """A fabricated single-hop chain: rows lifted from the receiver's
+    own mirror with inflated trust (what a liar would ship)."""
+    mirror = receiver.mirror(shard)
+    rows = slice_state(mirror, np.arange(min(2, len(mirror.peer_ids))))
+    rows.trust[:] = trust
+    return ShardDelta(shard=shard, base_version=receiver.version_vector[shard],
+                      new_version=new_version,
+                      removed_ids=np.empty(0, np.int64), rows=rows)
+
+
+def _fake_message(relay, sender, receiver, cfg, shard, delta, now=2.0):
+    msg = relay.node(sender).message(now, cfg.node_ttl_s)
+    versions = list(msg.versions)
+    chains = [[] for _ in versions]
+    versions[shard] = int(delta.new_version)
+    chains[shard] = [delta]
+    return dataclasses.replace(msg, versions=tuple(versions),
+                               chains=chains, _wire_bytes=None)
+
+
+# ---------------------------------------------------------------------------
+# Shard state digests (core/digest.py)
+# ---------------------------------------------------------------------------
+
+
+class TestStateDigest:
+    def test_empty_state_and_seed_keying(self):
+        assert state_digest(empty_state(), SEED) == empty_digest(SEED)
+        assert empty_digest(SEED) != empty_digest(SEED + 1)
+        assert mix64(1) not in (0, 1, mix64(2))
+
+    def test_row_order_invariant_but_content_sensitive(self):
+        cfg = GTRACConfig()
+        reg = populate(AnchorRegistry(cfg), n=16)
+        st0 = registry_shard_state(reg, 0)
+        d0 = state_digest(st0, SEED)
+        perm = np.random.default_rng(3).permutation(len(st0.peer_ids))
+        assert state_digest(slice_state(st0, perm), SEED) == d0
+        reg.set_trust(0, 0.123)
+        assert state_digest(registry_shard_state(reg, 0), SEED) != d0
+
+    def test_heartbeats_excluded_seq_included(self):
+        cfg = GTRACConfig()
+        reg = populate(AnchorRegistry(cfg), n=8)
+        st0 = registry_shard_state(reg, 0)
+        d0 = state_digest(st0, SEED)
+        reg.heartbeat(0, 99.0)   # liveness noise must not churn digests
+        assert state_digest(registry_shard_state(reg, 0), SEED) == d0
+        bumped = slice_state(st0, np.arange(len(st0.peer_ids)))
+        bumped.seq[0] += 1       # registration order IS identity
+        assert state_digest(bumped, SEED) != d0
+
+    def test_registry_digest_cache_tracks_versions(self):
+        cfg = GTRACConfig()
+        reg = populate(AnchorRegistry(cfg), n=8)
+        d0 = reg.state_digest()
+        assert d0 == reg.state_digest()          # cached, stable
+        assert d0 == state_digest(registry_shard_state(reg, 0),
+                                  cfg.sync_digest_seed)
+        reg.register(100, 0, 3, now=0.0, profile="golden")
+        assert reg.state_digest() != d0          # version bump recomputes
+
+    def test_sharded_digest_vector_matches_exports(self):
+        cfg = GTRACConfig()
+        reg = populate(ShardedAnchorRegistry(cfg, n_shards=4), n=32)
+        dv = reg.digest_vector()
+        for s in range(4):
+            assert dv[s] == state_digest(reg.export_shard_state(s),
+                                         cfg.sync_digest_seed)
+
+    def test_seeker_incremental_digest_matches_scratch(self):
+        """Through real scheduler traffic (deltas, fulls, removals,
+        joins) every seeker's incrementally-maintained digest must equal
+        the from-scratch digest of its mirror — and the anchor's."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg)
+        rng = np.random.default_rng(7)
+        next_pid, now = [1000], 0.0
+        for _ in range(10):
+            _churn(reg, rng, now, next_pid)
+            if rng.integers(3) == 0:
+                reg.deregister(int(rng.choice(list(reg.peers))))
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+            for sk in seekers:
+                for s in range(sk.n_shards):
+                    assert sk.shard_digest(s) == state_digest(
+                        sk.mirror(s), cfg.sync_digest_seed)
+        for _ in range(math.ceil(math.log2(len(seekers))) + 2):
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+        assert sched.all_converged(now, check_table=True)
+        dv = reg.digest_vector()
+        for sk in seekers:
+            for s in range(sk.n_shards):
+                assert sk.shard_digest(s) == dv[s]
+
+    def test_checkpoint_restore_roundtrip(self):
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=1)
+        sk = seekers[0]
+        token = sk.checkpoint(0)
+        d0, v0 = sk.shard_digest(0), sk.version_vector[0]
+        sk.invalidate_shard(0)
+        assert sk.version_vector[0] == -1
+        assert sk.shard_digest(0) == empty_digest(cfg.sync_digest_seed)
+        sk.restore(0, token)
+        assert sk.version_vector[0] == v0 and sk.shard_digest(0) == d0
+
+
+class TestDigestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 3),
+                              st.floats(0.1, 1.0)),
+                    min_size=1, max_size=24))
+    def test_incremental_equals_scratch_for_any_script(self, script):
+        """Property: any mutation script (trust writes, joins, removals,
+        heartbeats) leaves the seeker's incremental digest equal to the
+        from-scratch digest of its mirror."""
+        cfg = GTRACConfig(gossip_fanout=8)
+        reg = populate(ShardedAnchorRegistry(cfg, n_shards=2), n=8)
+        pub, (sk,), sched = make_sync_plane(reg, cfg, now=0.0)
+        now, next_pid = 0.0, 100
+        for pid, op, x in script:
+            if op == 0:
+                reg.set_trust(pid % len(reg.peers), float(x))
+            elif op == 1:
+                reg.register(next_pid, 0, 3, now=now, profile="golden",
+                             trust=float(x))
+                reg.heartbeat(next_pid, now)
+                next_pid += 1
+            elif op == 2 and len(reg.peers) > 2:
+                reg.deregister(sorted(reg.peers)[pid % len(reg.peers)])
+            else:
+                reg.heartbeat(sorted(reg.peers)[pid % len(reg.peers)],
+                              now + 0.5)
+            now += cfg.gossip_period_s
+            sched.tick(now)
+            for s in range(sk.n_shards):
+                assert sk.shard_digest(s) == state_digest(
+                    sk.mirror(s), cfg.sync_digest_seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_honest_relay_never_quarantines(self, seed):
+        """Property: an all-honest relay plane never sees a digest
+        mismatch or a quarantine, whatever the churn (no
+        false-positive convictions)."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=5,
+                                                shards=3, n=24)
+        rng = np.random.default_rng(seed)
+        next_pid, now = [1000], 0.0
+        for _ in range(8):
+            _churn(reg, rng, now, next_pid)
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+        assert sched.relay.stats.digest_mismatches == 0
+        assert sched.relay.stats.quarantines == 0
+        assert sched.relay.stats.rejected_chains == 0
+
+
+# ---------------------------------------------------------------------------
+# Byzantine hardening (sync/relay.py verification paths)
+# ---------------------------------------------------------------------------
+
+
+class TestRelayHardening:
+    def test_fabricated_chain_rejected_and_sender_quarantined(self):
+        """A chain claiming an attested version with rows that don't
+        hash to the attested digest is rolled back wholesale and the
+        sender convicted (the receiver's base was verified)."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        reg.set_trust(0, 0.42)                      # anchor moves on
+        vv, dv = pub.version_vector(), pub.digest_vector()
+        sh = next(s for s in range(4) if vv[s] != s1.version_vector[s])
+        # s1 hears the attestation but not the data — the lying window
+        relay.node(s1).observe_anchor(vv, 1.0, digests=dv)
+        before = s1.version_vector[sh]
+        fake = _fake_delta(s1, sh, vv[sh])
+        msg = _fake_message(relay, s0, s1, cfg, sh, fake)
+        relay.deliver(msg, relay.node(s0), s1, 2.0)
+        assert relay.stats.digest_mismatches == 1
+        assert relay.stats.rejected_chains == 1
+        assert relay.stats.quarantines == 1
+        assert s1.version_vector[sh] == before      # staged, rolled back
+        assert relay.node(s1).is_quarantined(msg.sender_id, relay._round)
+        # everything further from the convict is dropped unread
+        relay.deliver(relay.node(s0).message(2.0, cfg.node_ttl_s),
+                      relay.node(s0), s1, 2.0)
+        assert relay.stats.quarantine_drops == 1
+
+    def test_honest_chain_passes_verification(self):
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        reg.set_trust(0, 0.42)
+        sh = next(s for s in range(4)
+                  if pub.version_vector()[s] != s0.version_vector[s])
+        sched._ship(s0, sh, 1.0)                    # honest data + attest
+        msg = sched.relay.node(s0).message(1.0, cfg.node_ttl_s)
+        sched.relay.deliver(msg, sched.relay.node(s0), s1, 1.0)
+        assert s1.version_vector[sh] == s0.version_vector[sh]
+        assert s1.shard_digest(sh) == s0.shard_digest(sh)
+        assert sched.relay.stats.digest_mismatches == 0
+        assert sched.relay.stats.quarantines == 0
+
+    def test_future_version_claim_convicted_after_anchor_repair(self):
+        """Claiming a version the anchor does not have is provable once
+        the receiver's repair pull comes back: versions are
+        anchor-monotonic, so the sender fabricated it."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        sh = 0
+        fake = _fake_delta(s1, sh, s1.version_vector[sh] + 7)
+        msg = _fake_message(relay, s0, s1, cfg, sh, fake)
+        pulled = []
+
+        def anchor_pull(sk, s, t):
+            pulled.append(s)
+            sched._ship(sk, s, t)
+            return True
+
+        relay.deliver(msg, relay.node(s0), s1, 2.0, anchor_pull)
+        assert pulled == [sh]
+        assert relay.stats.deferred_unattested >= 1
+        assert relay.stats.quarantines == 1
+        assert relay.node(s1).is_quarantined(msg.sender_id, relay._round)
+
+    def test_future_dated_lease_rejected(self):
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        msg = relay.node(s0).message(1.0, cfg.node_ttl_s)
+        hb_times = msg.hb_times.copy()
+        hb_times[0] = s1.hb_stamp(0) + 1.0          # "fresher" stamp...
+        cols = list(msg.hb_cols)
+        cols[0] = np.full(len(s1.mirror(0).peer_ids),
+                          hb_times[0] + 60.0)        # ...postdated entries
+        msg = dataclasses.replace(msg, hb_cols=cols, hb_times=hb_times,
+                                  _wire_bytes=None)
+        stamp = s1.hb_stamp(0)
+        relay.deliver(msg, relay.node(s0), s1, 1.0)
+        assert relay.stats.hb_rejected == 1
+        assert s1.hb_stamp(0) == stamp               # lease not adopted
+
+    def test_unattested_neighbor_full_sync_refused(self):
+        """A neighbor full sync claiming a version past every signed
+        sighting is refused, not adopted — the lifeline cannot be used
+        to poison an anchor-partitioned receiver."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        reg.set_trust(0, 0.42)
+        sh = next(s for s in range(4)
+                  if pub.version_vector()[s] != s0.version_vector[s])
+        sched._ship(s0, sh, 1.0)                     # s0 honestly ahead
+        # s1's attestation store still only covers the boot version
+        before = s1.version_vector[sh]
+        relay._peer_full_sync(relay.node(s0), s1, sh, s0.source_id)
+        assert s1.version_vector[sh] == before
+        assert relay.stats.deferred_unattested == 1
+        assert relay.stats.peer_full_syncs == 0
+        # once the sighting arrives, the same sync is verified and lands
+        relay.node(s1).observe_anchor(pub.version_vector(), 1.0,
+                                      digests=pub.digest_vector())
+        relay._peer_full_sync(relay.node(s0), s1, sh, s0.source_id)
+        assert s1.version_vector[sh] == s0.version_vector[sh]
+        assert relay.stats.peer_full_syncs == 1
+        assert relay.stats.quarantines == 0
+
+    def test_quarantine_sentence_expires(self):
+        cfg = _relay_cfg(relay_quarantine_rounds=2)
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        node = sched.relay.node(seekers[1])
+        node.quarantine(999, sched.relay._round + 2)
+        assert node.is_quarantined(999, sched.relay._round)
+        assert node.is_quarantined(999, sched.relay._round + 1)
+        assert not node.is_quarantined(999, sched.relay._round + 2)
+        assert 999 not in node.quarantined           # sentence served
+
+    def test_fault_hook_can_drop_payloads(self):
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        relay.fault_hook = lambda payload, receiver: None
+        msg = relay.node(s0).message(1.0, cfg.node_ttl_s)
+        relay.deliver(msg, relay.node(s0), s1, 1.0)
+        assert relay.stats.msgs == 0                 # dropped pre-count
+
+    def test_catchup_ticks_never_reject_honest_leases(self):
+        """Regression (found driving the serving CLI): maybe_tick's
+        catch-up replayed missed rounds at back-dated timestamps while
+        shipping present-time registry columns, so every relayed honest
+        lease carried entries past its stamps AND past the replayed
+        delivery clock — rejected as future-dated fabrications."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg)
+        now = 6.5 * cfg.gossip_period_s      # stalled driver: rounds owed
+        reg.heartbeat_all(list(reg.peers), now)   # present-time liveness
+        assert sched.maybe_tick(now)
+        assert sched.relay.stats.hb_rejected == 0
+        assert sched.relay.stats.hb_adopted > 0
+        assert sched.relay.stats.quarantines == 0
+
+    def test_poisoned_mirror_self_repairs_on_anchor_leg(self):
+        """A mirror poisoned before any attestation existed is caught by
+        the anchor-leg digest check: invalidated and fully resynced (a
+        same-version full cannot replace poisoned rows — the version
+        contract assumes identical rows)."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=1)
+        sk = seekers[0]
+        reg.set_trust(0, 0.42)
+        vv = pub.version_vector()
+        sh = next(s for s in range(4) if vv[s] != sk.version_vector[s])
+        sk.apply(_fake_delta(sk, sh, vv[sh]), 1.0)   # poison, same version
+        assert sk.shard_digest(sh) != pub.digest(sh)
+        m0 = sched.stats.digest_mismatches
+        sched._ship(sk, sh, 2.0)
+        assert sched.stats.digest_mismatches == m0 + 1
+        assert sk.shard_digest(sh) == pub.digest(sh)
+        assert sk.version_vector[sh] == vv[sh]
+
+
+# ---------------------------------------------------------------------------
+# Digest handshake (summary / pull)
+# ---------------------------------------------------------------------------
+
+
+class TestDigestHandshake:
+    def test_steady_state_ships_summaries_only(self):
+        """Once converged with nothing moving, a relay round is pure
+        summaries: no data messages, no pulls, no duplicates."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg)
+        now = 0.0
+        for _ in range(4):
+            now += cfg.gossip_period_s
+            reg.heartbeat_all(list(reg.peers), now)
+            sched.tick(now)
+        assert sched.all_converged(now)
+        for _ in range(3):
+            sched.tick(now)              # let hb leases equalize
+        rs = sched.relay.stats
+        m0, p0, s0 = rs.msgs, rs.chain_pulls, rs.summaries
+        sched.tick(now)                              # frozen world
+        assert rs.msgs == m0 and rs.chain_pulls == p0
+        assert rs.summaries > s0
+        assert rs.duplicates == 0 and rs.wasted_bytes == 0
+
+    def test_handshake_cuts_bytes_at_equal_convergence(self):
+        """Same churn, both wire protocols: the handshake must apply the
+        same deltas with zero duplicates and strictly fewer
+        seeker→seeker bytes."""
+        outcomes = {}
+        for handshake in (False, True):
+            cfg = _relay_cfg(relay_handshake=handshake)
+            reg, pub, seekers, sched = _relay_plane(cfg)
+            rng = np.random.default_rng(5)
+            next_pid, now = [1000], 0.0
+            for _ in range(8):
+                _churn(reg, rng, now, next_pid)
+                now += cfg.gossip_period_s
+                reg.heartbeat_all(list(reg.peers), now)
+                sched.tick(now)
+            for _ in range(math.ceil(math.log2(len(seekers))) + 2):
+                if sched.all_converged(now):
+                    break
+                now += cfg.gossip_period_s
+                reg.heartbeat_all(list(reg.peers), now)
+                sched.tick(now)
+            assert sched.all_converged(now, check_table=True)
+            rs = sched.relay.stats
+            outcomes[handshake] = (rs.seeker_wire_bytes(), rs.duplicates,
+                                   rs.digest_mismatches, rs.quarantines)
+        (blind_bytes, blind_dups, bm, bq) = outcomes[False]
+        (hs_bytes, hs_dups, hm, hq) = outcomes[True]
+        assert hs_bytes < blind_bytes
+        assert hs_dups == 0 < blind_dups
+        assert bm == bq == hm == hq == 0             # honest path clean
+
+    def test_pull_trims_chains_to_receiver_floor(self):
+        """The handshake response carries only requested shards, and
+        chains trimmed to the suffix above the receiver's version."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        pid0 = next(p for p in reg.peers if reg.owner_of(p) == 0)
+        reg.set_trust(pid0, 0.5)
+        sched._ship(s0, 0, 1.0)
+        reg.set_trust(pid0, 0.7)
+        sched._ship(s0, 0, 2.0)
+        v_mid = s0.version_vector[0] - 1
+        full = sched.relay.node(s0).message(2.0, cfg.node_ttl_s)
+        trimmed = sched.relay.node(s0).message(
+            2.0, cfg.node_ttl_s, shards={0}, hb_shards=set(),
+            floors={0: v_mid})
+        assert len(full.chains[0]) == 2
+        assert [d.new_version for d in trimmed.chains[0]] == [v_mid + 1]
+        assert all(c == [] for c in trimmed.chains[1:])
+        assert all(c is None for c in trimmed.hb_cols)
+        assert trimmed.wire_bytes() < full.wire_bytes()
+
+    def test_summary_divergence_convicts_liar(self):
+        """A summary claiming the receiver's own attested version with a
+        different digest is a provable lie — no pull happens."""
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=2)
+        s0, s1 = seekers
+        relay = sched.relay
+        summary = relay.node(s0).summary(1.0)
+        digests = list(summary.digests)
+        digests[0] ^= 0xDEADBEEF
+        summary = dataclasses.replace(summary, digests=tuple(digests))
+        pulls0 = relay.stats.chain_pulls
+        relay.exchange(summary, relay.node(s0), s1, 1.0)
+        assert relay.stats.quarantines == 1
+        assert relay.stats.chain_pulls == pulls0
+        assert relay.node(s1).is_quarantined(summary.sender_id,
+                                             relay._round)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine scenario class (sim/testbed.py)
+# ---------------------------------------------------------------------------
+
+
+class TestByzantineScenario:
+    @pytest.mark.parametrize("handshake", [True, False])
+    def test_honest_seekers_converge_through_liars(self, handshake):
+        cfg = GTRACConfig(relay_enabled=True, relay_fanout=4,
+                          gossip_fanout=2, relay_handshake=handshake,
+                          gossip_hb_refresh_frac=0.5)
+        bed = build_scaling_testbed(48, cfg=cfg, seed=3, shards=4)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=12, now=0.0)
+        for _ in range(3):
+            bed.advance(2.0)
+            bed.anchor.sweep(bed.now)
+            sched.tick(bed.now)
+        rng = np.random.default_rng(9)
+        next_pid = [max(bed.peers) + 1]
+
+        def mutate(b):
+            pids = [p for p, pr in b.peers.items() if pr.alive]
+            b.anchor.set_trust(pids[int(rng.integers(len(pids)))],
+                               float(rng.uniform(0.3, 1.0)))
+            pid = next_pid[0]
+            next_pid[0] += 1
+            b.anchor.register(pid, 0, 3, now=b.now, profile="golden")
+            b.anchor.heartbeat(pid, b.now)
+
+        bz = simulate_byzantine(bed, sched, seekers, n_liars=3,
+                                churn_windows=5, mutate=mutate)
+        assert bz.honest_converged
+        assert bz.poisoned_mirrors == 0
+        assert bz.resurrected_seen == 0              # dead stay dead
+        assert bz.quarantines > 0                    # liars convicted
+        assert bz.fabricated_summaries + bz.fabricated_msgs > 0
+        if not handshake:
+            assert bz.rejected_chains > 0            # chains delivered,
+                                                     # every one rejected
+
+    def test_liar_hook_leaves_honest_payloads_alone(self):
+        cfg = _relay_cfg()
+        reg, pub, seekers, sched = _relay_plane(cfg, n_seekers=3)
+        hook = make_liar_hook(sched.relay, {seekers[1].source_id})
+        honest = sched.relay.node(seekers[0]).message(1.0, cfg.node_ttl_s)
+        assert hook(honest, seekers[2]) is honest
+
+    def test_partition_byte_accounting_includes_relay_leg(self):
+        """Regression (PR 6): reconciliation byte accounting must cover
+        the seeker→seeker wire, not just the anchor leg."""
+        cfg = _relay_cfg()
+        bed = build_scaling_testbed(48, cfg=cfg, seed=1, shards=4)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=6, now=0.0)
+        cut = seekers[0]
+        a0 = sched.stats.delta_bytes + sched.stats.full_bytes
+        rs = sched.relay.stats
+        r0 = (rs.msg_bytes + rs.summary_bytes + rs.pull_req_bytes
+              + rs.peer_full_bytes)
+        pstats = simulate_partition(bed, sched, cut,
+                                    list(range(pub.n_shards)),
+                                    partition_windows=4, window_s=2.0)
+        assert pstats.converged
+        relay_leg = (rs.msg_bytes + rs.summary_bytes + rs.pull_req_bytes
+                     + rs.peer_full_bytes) - r0
+        anchor_leg = (sched.stats.delta_bytes
+                      + sched.stats.full_bytes) - a0
+        assert relay_leg > 0                         # the epidemic moved
+        assert pstats.relay_bytes == relay_leg
+        assert pstats.delta_bytes + pstats.full_bytes == \
+            anchor_leg + relay_leg                   # pre-fix: anchor only
+
+    def test_honest_partition_run_stays_clean(self):
+        """Existing non-adversarial scenarios must see zero mismatches
+        and zero quarantines with verification on (honest-path
+        safety)."""
+        cfg = _relay_cfg()
+        bed = build_scaling_testbed(48, cfg=cfg, seed=2, shards=4)
+        pub, seekers, sched = make_sync_plane(bed.anchor, cfg,
+                                              n_seekers=6, now=0.0)
+        rng = np.random.default_rng(4)
+
+        def mutate(b):
+            pids = sorted(b.anchor.peers)
+            b.anchor.set_trust(pids[int(rng.integers(len(pids)))],
+                               float(rng.uniform(0.3, 1.0)))
+
+        pstats = simulate_partition(bed, sched, seekers[0],
+                                    [0, 1], partition_windows=4,
+                                    window_s=2.0, mutate=mutate)
+        assert pstats.converged
+        assert sched.relay.stats.digest_mismatches == 0
+        assert sched.relay.stats.quarantines == 0
+        assert sched.stats.digest_mismatches == 0

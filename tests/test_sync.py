@@ -1001,7 +1001,15 @@ class TestGossipRegressions:
     def test_partition_state_not_inherited_by_recreated_seeker(self, gcfg):
         """Regression: _blocked was keyed by id(seeker); a
         garbage-collected seeker's reused python id handed its partition
-        state to a brand-new seeker. Keyed by source_id now."""
+        state to a brand-new seeker. Keyed by source_id now.
+
+        The deterministic contract (keys ARE source_ids; any fresh
+        seeker starts unblocked) is asserted unconditionally. Actually
+        landing a new seeker on the dead one's python id is allocator
+        luck — when CPython obliges within 256 allocations the test
+        exercises the original crash verbatim; when it doesn't, the
+        contract assertions still pin the fix, so the test never
+        skips."""
         reg = populate(ShardedAnchorRegistry(gcfg, n_shards=2))
         pub, (s0,), sched = make_sync_plane(reg, gcfg, now=0.0)
         old = SeekerCache(gcfg, 2, now=0.0)
@@ -1010,27 +1018,27 @@ class TestGossipRegressions:
         assert sched.blocked_shards(old) == {0, 1}
         # deterministic: the key IS the stable source_id, not id()
         assert set(sched._blocked) == {old.source_id}
-        old_pyid = id(old)
+        old_pyid, old_sid = id(old), old.source_id
         # drop the seeker WITHOUT scheduler hygiene (the crash path)
         sched.seekers = [s for s in sched.seekers if s is not old]
         del old
         gc.collect()
-        reused = None
+        fresh = SeekerCache(gcfg, 2, now=0.0)
         keep = []
         for _ in range(256):
-            cand = SeekerCache(gcfg, 2, now=0.0)
-            if id(cand) == old_pyid:
-                reused = cand
+            if id(fresh) == old_pyid:   # the original bug's exact trigger
                 break
-            keep.append(cand)
-        if reused is None:           # allocator didn't reuse the block
-            pytest.skip("CPython did not reuse the id in 256 allocs")
-        sched.seekers.append(reused)
-        assert sched.blocked_shards(reused) == set()   # pre-fix: {0, 1}
+            keep.append(fresh)
+            fresh = SeekerCache(gcfg, 2, now=0.0)
+        # source_ids are never recycled, so the stale entry cannot alias
+        # the newcomer — python id reuse or not
+        assert fresh.source_id != old_sid
+        sched.seekers.append(fresh)
+        assert sched.blocked_shards(fresh) == set()    # pre-fix: {0, 1}
         pushes0 = sched.stats.pushes
         sched.tick(1.0)
         assert sched.stats.pushes > pushes0
-        assert sched.converged(reused, 1.0, check_table=False)
+        assert sched.converged(fresh, 1.0, check_table=False)
 
     def test_remove_seeker_drops_all_per_seeker_state(self, gcfg):
         """Scheduler hygiene across drop/recreate cycles: partitions and
