@@ -14,7 +14,16 @@
 #                        seeker parity, post-heal convergence, and the
 #                        ceil(log2 N)+2 relay convergence bound always
 #                        asserted — --quick included)
-#   make bench-smoke    CI smoke lane: all four benches in --quick mode
+#   make bench-control-plane
+#                       process-backed anchor control plane ->
+#                       BENCH_control_plane.json (FAILS unless 8 shard
+#                       worker processes aggregate >= 1M heartbeats/s of
+#                       batched fan-in; the kill-a-worker chaos lane —
+#                       zero routing windows lost, ledger restore,
+#                       composed-snapshot parity vs worker exports — and
+#                       the FakeClock retry/backoff determinism lane are
+#                       asserted every run, --quick included)
+#   make bench-smoke    CI smoke lane: all five benches in --quick mode
 #                       (tiny N/R, perf gates skipped; writes
 #                        BENCH_*.quick.json, never the tracked JSONs)
 #   make lint           compile-check + ruff (pyflakes fallback). HARD
@@ -30,7 +39,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test bench-routing bench-serving bench-sharding bench-sync \
-	bench-smoke lint
+	bench-control-plane bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -47,11 +56,15 @@ bench-sharding:
 bench-sync:
 	$(PY) -m benchmarks.bench_sync
 
+bench-control-plane:
+	$(PY) -m benchmarks.bench_control_plane
+
 bench-smoke:
 	$(PY) -m benchmarks.bench_scaling --quick
 	$(PY) -m benchmarks.bench_serving --quick
 	$(PY) -m benchmarks.bench_sharding --quick
 	$(PY) -m benchmarks.bench_sync --quick
+	$(PY) -m benchmarks.bench_control_plane --quick
 
 lint:
 	$(PY) -m compileall -q src benchmarks tests examples

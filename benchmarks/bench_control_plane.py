@@ -1,0 +1,282 @@
+"""Out-of-process anchor control plane: heartbeat fan-in throughput,
+kill-a-worker chaos, and RPC determinism.
+
+What the process boundary must buy (and what it must not cost):
+
+* **Fan-in throughput** (gated) — liveness is the control plane's
+  highest-rate write stream. Heartbeats are buffered composer-side,
+  bucketed with one vectorized hash pass, and shipped as batched
+  per-shard commands pipelined across all workers — so 8 real worker
+  processes must aggregate >= 1M heartbeats/s through real
+  multiprocessing queues (gate skipped in --quick, which runs a tiny
+  version of the lane).
+* **Kill-a-worker chaos** (asserted every run, quick included) — with a
+  ``ReplicatedAnchor`` ledger over a process-backed primary, SIGKILL
+  one shard worker mid-churn: every routing window during the outage
+  still gets a composed snapshot (the dead shard's slice serves stale —
+  ZERO windows lost), the worker is respawned and restored from the
+  ledger, and the composed snapshot re-converges bit-for-bit with the
+  live workers' exported ground truth.
+* **RPC determinism** (asserted every run) — the timeout/retry/backoff
+  state machine replayed on a ``FakeClock`` against a black-holed
+  transport produces the exact backoff schedule and the exact number of
+  deadline expiries, with zero wall-clock sleeps.
+* **Parity** (asserted every run) — composer snapshots over the pickled
+  message path are bit-identical to the in-process
+  ``ShardedAnchorRegistry`` at S in {1, 4, 16}.
+
+Emits BENCH_control_plane.json via benchmarks/common. Run with --quick
+for the CI smoke lane (tiny N/R, perf gate skipped; chaos, determinism
+and parity still asserted).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.configs.base import GTRACConfig
+from repro.control_plane import (FakeClock, LoopbackTransport,
+                                 ProcessShardedRegistry, RpcChannel,
+                                 RpcPolicy, RpcTimeout, ShardHost)
+from repro.core.failover import ReplicatedAnchor
+from repro.core.sharding import ShardedAnchorRegistry
+from repro.core.types import ExecReport, HopReport
+
+FANIN_WORKERS = 8
+FANIN_GATE_HB_PER_S = 1_000_000.0
+SNAP_COLS = ("peer_ids", "layer_start", "layer_end", "trust",
+             "latency_ms", "alive")
+
+
+def _tables_equal(a, b) -> bool:
+    return all(np.array_equal(getattr(a, c), getattr(b, c))
+               for c in SNAP_COLS)
+
+
+# ---------------------------------------------------------------------------
+# 1. Parity: pickled message path vs in-process twin
+# ---------------------------------------------------------------------------
+
+
+def _drive(reg, n):
+    for pid in range(n):
+        reg.register(pid, (pid % 4) * 2, (pid % 4) * 2 + 2,
+                     now=pid * 0.01, trust=0.5 + 0.005 * (pid % 90),
+                     latency_ms=10.0 + pid % 50)
+    reg.heartbeat_all(np.arange(n), 2.0)
+    reg.apply_report(ExecReport(
+        success=True, chain=[0, 1],
+        hops=[HopReport(0, 10.0, True), HopReport(1, 12.0, True)]))
+    reg.apply_report(ExecReport(
+        success=False, chain=[2], hops=[HopReport(2, 300.0, False)],
+        failed_peer=2))
+    reg.deregister(3)
+    reg.register(3, 0, 2, now=3.0)
+    reg.sweep(4.0, decay_rate=0.01)
+    return reg.snapshot(5.0)
+
+
+def parity_lane(quick: bool, results: dict) -> None:
+    n = 60 if quick else 240
+    for S in (1, 4, 16):
+        cfg = GTRACConfig()
+        twin = ShardedAnchorRegistry(cfg, n_shards=S)
+        proc = ProcessShardedRegistry(
+            cfg, n_shards=S,
+            transport_factory=lambda s: LoopbackTransport(
+                ShardHost(cfg, s)))
+        with proc:
+            t0 = time.perf_counter()
+            tb = _drive(proc, n)
+            us = (time.perf_counter() - t0) * 1e6
+            ta = _drive(twin, n)
+        ok = _tables_equal(ta, tb)
+        emit(f"control_plane/parity_S{S}", us,
+             f"bit_identical={ok} peers={len(ta.peer_ids)}")
+        assert ok, f"composed snapshot diverged from twin at S={S}"
+    results["parity"] = {"shards": [1, 4, 16], "bit_identical": True}
+
+
+# ---------------------------------------------------------------------------
+# 2. Heartbeat fan-in throughput over real worker processes (gated)
+# ---------------------------------------------------------------------------
+
+
+def fanin_lane(quick: bool, results: dict) -> bool:
+    n_peers = 2048 if quick else 8192
+    rounds = 5 if quick else 50
+    cfg = GTRACConfig()
+    reg = ProcessShardedRegistry(cfg, n_shards=FANIN_WORKERS)
+    with reg:
+        ids = np.arange(n_peers, dtype=np.int64)
+        for pid in range(n_peers):
+            reg.register(pid, 0, 2, now=0.0)
+        reg.snapshot(0.5)                         # settle registration
+        # warmup round (queue/pickle paths touch everything once)
+        reg.heartbeat_all(ids, 0.9)
+        reg.flush_heartbeats()
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            reg.heartbeat_all(ids, 1.0 + r * 0.1)
+            reg.flush_heartbeats()
+        dt = time.perf_counter() - t0
+        # the heartbeats really landed: liveness survives a distant sweep
+        t = reg.snapshot(1.0 + rounds * 0.1 + cfg.node_ttl_s - 0.5)
+        assert int(t.alive.sum()) == n_peers, "heartbeats were lost"
+        assert reg.health.rpc_timeouts == 0 and not reg.degraded
+    hb_per_s = n_peers * rounds / dt
+    emit(f"control_plane/fanin_hb_{FANIN_WORKERS}w",
+         dt / rounds * 1e6,
+         f"hb_per_s={hb_per_s:.0f} peers={n_peers} rounds={rounds}")
+    results["fanin"] = {"workers": FANIN_WORKERS, "peers": n_peers,
+                        "rounds": rounds, "hb_per_s": hb_per_s}
+    return hb_per_s >= FANIN_GATE_HB_PER_S
+
+
+# ---------------------------------------------------------------------------
+# 3. Kill-a-worker chaos over the ReplicatedAnchor ledger (always asserted)
+# ---------------------------------------------------------------------------
+
+
+def chaos_lane(quick: bool, results: dict) -> None:
+    shards = 4 if quick else 8
+    n_peers = 96 if quick else 256
+    windows = 10 if quick else 24
+    kill_at, restore_at = 4, 7                   # 3 outage windows
+    victim = 1
+    cfg = dataclasses.replace(GTRACConfig(), control_plane="procs")
+    rep = ReplicatedAnchor(cfg, n_backups=1, shards=shards,
+                           sync_period_s=1.0)
+    prim = rep.primary
+    try:
+        ids = np.arange(n_peers, dtype=np.int64)
+        for pid in range(n_peers):
+            rep.register(pid, (pid % 4) * 2, (pid % 4) * 2 + 2,
+                         now=0.0, trust=0.6)
+        windows_served = 0
+        next_pid = n_peers
+        t0 = time.perf_counter()
+        for w in range(windows):
+            now = 10.0 + 2.0 * w
+            if w == kill_at:
+                prim.kill_worker(victim)
+            if w == restore_at:
+                prim.restart_worker(victim)      # respawn (mirror state)
+                assert rep.restore_shard(victim)  # then ledger re-adopt
+            rep.heartbeat_all(ids, now)
+            rep.apply_report(ExecReport(
+                success=True, chain=[int(ids[w % n_peers])],
+                hops=[HopReport(int(ids[w % n_peers]), 15.0, True)]))
+            rep.register(next_pid, 0, 2, now=now, trust=0.7)  # churn in
+            rep.deregister(next_pid - n_peers // 2)           # churn out
+            next_pid += 1
+            table = rep.snapshot(now + 1.0)      # the routing window
+            if len(table.peer_ids) > 0:
+                windows_served += 1
+            rep.tick(now + 1.5)                  # ledger replication
+        us = (time.perf_counter() - t0) / windows * 1e6
+
+        lost = windows - windows_served
+        assert lost == 0, f"{lost} routing windows lost during the outage"
+        assert prim.health.worker_restarts == 1
+        assert prim.health.degraded_windows >= 1, \
+            "the kill window never degraded — chaos did not bite"
+        assert not prim.degraded and not prim._dead
+
+        # composed-snapshot parity vs the live workers' ground truth
+        final = prim.snapshot(10.0 + 2.0 * windows)
+        states = [prim.channels[s].request("export")
+                  for s in range(shards)]
+        seq = np.concatenate([st.seq for st in states])
+        perm = np.argsort(seq, kind="stable")
+        truth_ids = np.concatenate([st.peer_ids for st in states])[perm]
+        truth_trust = np.concatenate([st.trust for st in states])[perm]
+        assert np.array_equal(final.peer_ids, truth_ids)
+        assert np.array_equal(final.trust, truth_trust)
+
+        h = prim.health
+        emit("control_plane/chaos_kill_worker", us,
+             f"windows_lost={lost} restarts={h.worker_restarts} "
+             f"degraded_windows={h.degraded_windows} "
+             f"dropped_writes={h.dropped_writes}")
+        results["chaos"] = {
+            "shards": shards, "peers": n_peers, "windows": windows,
+            "windows_lost": lost, "parity_restored": True,
+            "health": dataclasses.asdict(h)}
+    finally:
+        prim.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. RPC determinism under an injected clock (always asserted)
+# ---------------------------------------------------------------------------
+
+
+class _Mute(LoopbackTransport):
+    def post(self, msg):
+        pass
+
+
+def determinism_lane(results: dict) -> None:
+    cfg = GTRACConfig()
+    clock = FakeClock()
+    pol = RpcPolicy(timeout_s=1.0, retries=3, backoff_base_s=0.05,
+                    backoff_factor=2.0)
+    ch = RpcChannel(_Mute(ShardHost(cfg, 0)), pol, clock)
+    t0 = time.perf_counter()
+    try:
+        ch.request("ping")
+        raise AssertionError("black hole answered")
+    except RpcTimeout:
+        pass
+    us = (time.perf_counter() - t0) * 1e6
+    want = [pol.backoff(a) for a in range(pol.retries)]
+    assert clock.sleeps == want, \
+        f"backoff schedule {clock.sleeps} != {want}"
+    assert ch.stats.rpc_timeouts == pol.retries + 1
+    assert ch.stats.rpc_retries == pol.retries
+    emit("control_plane/rpc_determinism", us,
+         f"sleeps={clock.sleeps} timeouts={ch.stats.rpc_timeouts}")
+    results["determinism"] = {
+        "backoff_schedule_s": clock.sleeps,
+        "deadline_expiries": ch.stats.rpc_timeouts,
+        "wall_sleeps": 0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke lane: tiny N/R, throughput gate "
+                         "skipped; chaos / determinism / parity still "
+                         "asserted. Writes BENCH_control_plane.quick.json")
+    args = ap.parse_args(argv)
+    quick = args.quick
+
+    results: dict = {}
+    parity_lane(quick, results)
+    determinism_lane(results)
+    chaos_lane(quick, results)
+    fanin_ok = fanin_lane(quick, results)
+
+    extra = {"quick": quick, "results": results,
+             "gates": {"fanin_hb_per_s_min": FANIN_GATE_HB_PER_S,
+                       "fanin_workers": FANIN_WORKERS},
+             "gate_enforced": not quick}
+    write_json("BENCH_control_plane.quick.json" if quick
+               else "BENCH_control_plane.json",
+               prefix="control_plane/", extra=extra)
+    if not quick and not fanin_ok:
+        print(f"FAIL: heartbeat fan-in "
+              f"{results['fanin']['hb_per_s']:.0f}/s < "
+              f"{FANIN_GATE_HB_PER_S:.0f}/s across "
+              f"{FANIN_WORKERS} workers", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -345,6 +345,24 @@ class GTRACConfig:
     relay_handshake: bool = True
     relay_quarantine_rounds: int = 8
     sync_digest_seed: int = 0x5EED
+    # out-of-process anchor control plane (src/repro/control_plane/):
+    # control_plane="procs" runs every anchor shard in its own worker
+    # process behind multiprocessing queues — register / heartbeat /
+    # apply_report / sweep commands go to the owning worker, and a
+    # composer mirrors each shard via the sync-plane ShardDelta wire
+    # format, composing snapshots bit-identical to the in-process
+    # ShardedAnchorRegistry. Every composer<->worker RPC gets a deadline
+    # (cp_rpc_timeout_s) and bounded retries (cp_rpc_retries) with
+    # exponential backoff (cp_backoff_base_s * cp_backoff_factor**n),
+    # driven by an injectable clock so tests are deterministic. A shard
+    # that exhausts its retries degrades: its slice is served stale from
+    # the last composed snapshot (priced by the routing_view staleness
+    # machinery) instead of blocking the window cadence.
+    control_plane: str = "inproc"        # inproc | procs
+    cp_rpc_timeout_s: float = 2.0
+    cp_rpc_retries: int = 2
+    cp_backoff_base_s: float = 0.05
+    cp_backoff_factor: float = 2.0
 
 
 def asdict(cfg) -> dict:

@@ -1,0 +1,30 @@
+"""Out-of-process anchor control plane: worker-per-shard processes
+behind an RPC layer with deadlines, bounded retries, exponential
+backoff, and chaos-tested crash recovery.
+
+- ``rpc``      — transport protocol, retry/backoff channel, injectable clocks
+- ``worker``   — ``ShardHost`` command surface + process entry + transports
+- ``registry`` — ``ProcessShardedRegistry``, the composer (the drop-in
+  process-backed ``ShardedAnchorRegistry``)
+"""
+from repro.control_plane.registry import (           # noqa: F401
+    ControlPlaneHealth,
+    ProcessShardedRegistry,
+)
+from repro.control_plane.rpc import (                # noqa: F401
+    Clock,
+    FakeClock,
+    RpcChannel,
+    RpcPolicy,
+    RpcRemoteError,
+    RpcStats,
+    RpcTimeout,
+    SystemClock,
+    WorkerDown,
+)
+from repro.control_plane.worker import (             # noqa: F401
+    LoopbackTransport,
+    ProcWorker,
+    ShardHost,
+    worker_main,
+)

@@ -49,9 +49,10 @@ class ReplicatedAnchor:
                  shards: int = 1, shard_by: str = "peer"):
         self.cfg = cfg
         self.shards = int(shards)
-        self.replicas: List[AnyAnchor] = [
-            make_registry(cfg, shards=shards, shard_by=shard_by)
-            for _ in range(1 + n_backups)]
+        primary = make_registry(cfg, shards=shards, shard_by=shard_by)
+        self.replicas: List[AnyAnchor] = [primary] + [
+            self._make_backup(primary, cfg, shards, shard_by)
+            for _ in range(n_backups)]
         self.primary_idx = 0
         self.alive = [True] * (1 + n_backups)
         self.sync_period_s = sync_period_s or cfg.gossip_period_s
@@ -65,6 +66,23 @@ class ReplicatedAnchor:
         # that actually holds a copy
         self._shipped: dict = {}        # replica idx -> [version | None]*S
         self.failovers = 0
+
+    @staticmethod
+    def _make_backup(primary: AnyAnchor, cfg: GTRACConfig, shards: int,
+                     shard_by: str) -> AnyAnchor:
+        """Backups are always in-process (the ledger must survive a
+        worker massacre, so it cannot live behind the same process
+        boundary it insures), but they must speak the primary's
+        replication surface: a process-backed primary replicates per
+        shard even at S=1, which the monolithic registry cannot adopt."""
+        backup = make_registry(cfg, shards=shards, shard_by=shard_by,
+                               backend="inproc")
+        if hasattr(primary, "export_shard_state") and \
+                not hasattr(backup, "adopt_shard_state"):
+            backup = ShardedAnchorRegistry(
+                cfg, n_shards=getattr(primary, "n_shards", 1),
+                shard_by=shard_by)
+        return backup
 
     # -- the AnchorRegistry surface (delegated to the primary) ---------------
 
@@ -80,6 +98,10 @@ class ReplicatedAnchor:
 
     def heartbeat(self, peer_id: int, now: float) -> None:
         self.primary.heartbeat(peer_id, now)
+        self._last_primary_seen = now
+
+    def heartbeat_all(self, peer_ids, now: float) -> None:
+        self.primary.heartbeat_all(peer_ids, now)
         self._last_primary_seen = now
 
     def apply_report(self, report: ExecReport) -> None:
@@ -118,7 +140,8 @@ class ReplicatedAnchor:
         if not self.alive[self.primary_idx]:
             return
         primary = self.primary
-        if isinstance(primary, ShardedAnchorRegistry):
+        if hasattr(primary, "export_shard_state"):
+            # sharded surface — in-process or process-backed composer
             vec = primary.version_vector
             states: dict = {}       # exported once per dirty shard
             hbs: dict = {}          # exported once per clean shard
@@ -182,7 +205,7 @@ class ReplicatedAnchor:
         loss before the first replication tick, or right after a failover
         reset the ship ledger)."""
         primary = self.primary
-        if not isinstance(primary, ShardedAnchorRegistry):
+        if not hasattr(primary, "adopt_shard_state"):
             raise ValueError("restore_shard requires a sharded anchor group")
         best = None
         best_v = None

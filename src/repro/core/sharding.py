@@ -64,6 +64,19 @@ def stable_peer_hash(peer_id: int) -> int:
     return (z ^ (z >> 31)) & _M64
 
 
+def stable_peer_hash_vec(peer_ids: np.ndarray) -> np.ndarray:
+    """Vectorized ``stable_peer_hash`` over an int64 id array — uint64
+    arithmetic wraps exactly like the masked Python-int version, so
+    ``stable_peer_hash_vec(ids)[i] == stable_peer_hash(ids[i])`` always
+    (the batched-heartbeat bucketing path must agree with per-peer
+    placement). Returns uint64."""
+    with np.errstate(over="ignore"):
+        z = peer_ids.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
 @runtime_checkable
 class Registry(Protocol):
     """The control-plane surface serving / sim / replication code against —
@@ -98,8 +111,26 @@ class Registry(Protocol):
 
 
 def make_registry(cfg: GTRACConfig, shards: int = 1,
-                  shard_by: str = "peer") -> Registry:
-    """Factory: monolithic anchor for ``shards <= 1``, sharded otherwise."""
+                  shard_by: str = "peer",
+                  backend: Optional[str] = None) -> Registry:
+    """Factory: monolithic anchor for ``shards <= 1``, sharded otherwise.
+
+    ``backend`` (default: ``cfg.control_plane``) selects where the shards
+    live: ``"inproc"`` returns the in-process registries above;
+    ``"procs"`` returns a ``ProcessShardedRegistry`` — every shard in its
+    own worker process behind the RPC control plane
+    (src/repro/control_plane/), same surface, composed snapshots
+    bit-identical. Imported lazily so the in-process path never pays for
+    multiprocessing machinery."""
+    if backend is None:
+        backend = getattr(cfg, "control_plane", "inproc")
+    if backend == "procs":
+        from repro.control_plane.registry import ProcessShardedRegistry
+        return ProcessShardedRegistry(cfg, n_shards=max(1, int(shards)),
+                                      shard_by=shard_by)
+    if backend != "inproc":
+        raise ValueError(f"control_plane backend must be 'inproc' or "
+                         f"'procs', got {backend!r}")
     if shards <= 1:
         return AnchorRegistry(cfg)
     return ShardedAnchorRegistry(cfg, n_shards=shards, shard_by=shard_by)

@@ -40,6 +40,22 @@ def main(argv=None):
     ap.add_argument("--shard-by", default="peer", choices=["peer", "layer"],
                     help="shard placement key: peer-id hash or layer-slot "
                          "affinity")
+    ap.add_argument("--control-plane", default="inproc",
+                    choices=["inproc", "procs"],
+                    help="anchor shard backend: in-process registries, or "
+                         "one worker PROCESS per shard behind the RPC "
+                         "control plane (repro.control_plane) — deadlines, "
+                         "bounded retries, degraded-shard serving")
+    ap.add_argument("--cp-timeout", type=float, default=None, metavar="S",
+                    help="per-attempt composer->worker RPC deadline in "
+                         "seconds (default: GTRACConfig.cp_rpc_timeout_s)")
+    ap.add_argument("--cp-retries", type=int, default=None, metavar="N",
+                    help="RPC retries after the first deadline expiry "
+                         "(default: GTRACConfig.cp_rpc_retries)")
+    ap.add_argument("--cp-backoff", type=float, default=None, metavar="S",
+                    help="base backoff before the first retry; doubles "
+                         "per attempt (default: "
+                         "GTRACConfig.cp_backoff_base_s)")
     ap.add_argument("--hedged", action="store_true",
                     help="hedged window serving: fire a backup hop when a "
                          "primary exceeds its latency-quantile trigger")
@@ -136,7 +152,14 @@ def main(argv=None):
         gossip_kw["gossip_period_s"] = args.gossip_period
     if args.relay_quarantine_rounds is not None:
         gossip_kw["relay_quarantine_rounds"] = args.relay_quarantine_rounds
+    if args.cp_timeout is not None:
+        gossip_kw["cp_rpc_timeout_s"] = args.cp_timeout
+    if args.cp_retries is not None:
+        gossip_kw["cp_rpc_retries"] = args.cp_retries
+    if args.cp_backoff is not None:
+        gossip_kw["cp_backoff_base_s"] = args.cp_backoff
     gcfg = GTRACConfig(anchor_shards=args.shards, shard_by=args.shard_by,
+                       control_plane=args.control_plane,
                        hedge_enabled=args.hedged,
                        gossip_enabled=args.gossip,
                        gossip_fanout=args.gossip_fanout,
@@ -195,6 +218,8 @@ def main(argv=None):
                       f"chains, {rs.quarantines} quarantines "
                       f"({rs.quarantine_drops} drops), "
                       f"{rs.hb_rejected} hb rejections")
+        _report_control_plane(srv)
+        srv.close()
         return
     ok = 0
     for rid in range(args.requests):
@@ -208,6 +233,22 @@ def main(argv=None):
               f"{met.repairs} repairs, {met.failures} failures, "
               f"{lat:.2f}s/token -> {list(out)}")
     print(f"SSR: {ok}/{args.requests}")
+    _report_control_plane(srv)
+    srv.close()
+
+
+def _report_control_plane(srv) -> None:
+    """End-of-run health report for the process-backed control plane."""
+    cp = getattr(srv, "_cp", None)
+    if cp is None:
+        return
+    h = cp.health
+    print(f"control plane: {cp.n_shards} worker procs, "
+          f"{h.rpc_retries} rpc retries, {h.rpc_timeouts} timeouts, "
+          f"{h.degraded_windows} degraded windows, "
+          f"{h.worker_restarts} worker restarts, "
+          f"{h.dropped_writes} dropped writes, "
+          f"{h.full_resyncs} full resyncs")
 
 
 if __name__ == "__main__":

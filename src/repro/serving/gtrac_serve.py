@@ -123,6 +123,14 @@ class ServeMetrics:
     relay_digest_mismatches: int = 0
     relay_rejected_chains: int = 0
     relay_quarantines: int = 0
+    # process control plane (cfg.control_plane="procs"): cumulative
+    # composer health totals (control_plane/registry.py) at stream
+    # completion — RPC deadline expiries / re-posts, windows served with
+    # >= 1 degraded or dead shard, and worker respawns
+    shard_rpc_retries: int = 0
+    shard_timeouts: int = 0
+    degraded_windows: int = 0
+    worker_restarts: int = 0
 
 
 @dataclass
@@ -159,6 +167,10 @@ class GTRACPipelineServer:
         # snapshot unchanged
         anchor = make_registry(self.gcfg, shards=self.gcfg.anchor_shards,
                                shard_by=self.gcfg.shard_by)
+        # process-backed control plane (cfg.control_plane="procs"): the
+        # composer carries health counters and its own staleness-priced
+        # routing_view (degraded shards' slices serve stale, discounted)
+        self._cp = anchor if hasattr(anchor, "health") else None
         peers: Dict[int, SimPeer] = {}
         replicas = replicas or {"honeypot": 2, "turtle": 2, "golden": 2}
         pid = 0
@@ -234,6 +246,11 @@ class GTRACPipelineServer:
             self.gossip.maybe_tick(now)
             return self.sync_seeker.routing_view(now)
         self.seeker.maybe_sync(now)
+        if self._cp is not None:
+            # process backend: the sync above pulled the shard mirrors;
+            # route on the composer's staleness-priced view so degraded
+            # shards' rows are trust-discounted instead of trusted stale
+            return self._cp.routing_view(now)
         return self.seeker.view()
 
     # -- serving ---------------------------------------------------------------
@@ -299,6 +316,25 @@ class GTRACPipelineServer:
             metrics.relay_digest_mismatches = rs.digest_mismatches
             metrics.relay_rejected_chains = rs.rejected_chains
             metrics.relay_quarantines = rs.quarantines
+        self._mirror_control_plane(metrics)
+
+    def _mirror_control_plane(self, metrics: ServeMetrics) -> None:
+        """Surface cumulative composer health totals on a stream's
+        metrics (process control plane only)."""
+        if self._cp is None:
+            return
+        h = self._cp.health
+        metrics.shard_rpc_retries = h.rpc_retries
+        metrics.shard_timeouts = h.rpc_timeouts
+        metrics.degraded_windows = h.degraded_windows
+        metrics.worker_restarts = h.worker_restarts
+
+    def close(self) -> None:
+        """Release control-plane resources (shard worker processes).
+        Idempotent; a no-op for in-process registries."""
+        fn = getattr(self.bed.anchor, "close", None)
+        if fn is not None:
+            fn()
 
     # -- window-batched serving (the batch router path) ------------------------
 

@@ -19,7 +19,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.sharding import Registry, ShardedAnchorRegistry, make_registry
+from repro.core.sharding import Registry, make_registry
 from repro.sim.peers import PROFILES, SimPeer, make_peer
 
 GPT2_LARGE_LAYERS = 36
@@ -83,15 +83,31 @@ class Testbed:
 
     # -- shard-aware fault injection ------------------------------------------
 
-    def crash_anchor_shard(self, shard: int) -> List[int]:
+    def crash_anchor_shard(self, shard: int,
+                           kill_worker: bool = False) -> List[int]:
         """Crash every peer homed on one anchor shard (requires a sharded
         anchor): their heartbeats stop, the shard's next sweep TTL-expires
         them, and — because the other shards stay clean — only that shard's
-        columns rebuild in the composed snapshot. Returns the crashed ids."""
+        columns rebuild in the composed snapshot. Returns the crashed ids.
+
+        ``kill_worker=True`` additionally SIGKILLs the shard's worker
+        process (process backend only — ``cfg.control_plane='procs'``):
+        the control-plane failure domain goes down WITH its peers, the
+        composer degrades the shard, and recovery goes through
+        ``restart_worker`` / the ``ReplicatedAnchor`` ledger.
+
+        Both preconditions are checked before ANY state is touched — a
+        rejected call must not leave half the peers crashed."""
         anchor = self.anchor
-        if not isinstance(anchor, ShardedAnchorRegistry):
+        if not hasattr(anchor, "owner_of"):
             raise ValueError("crash_anchor_shard needs a sharded anchor")
+        if kill_worker and not hasattr(anchor, "kill_worker"):
+            raise ValueError(
+                "kill_worker=True needs a process-backed anchor "
+                "(cfg.control_plane='procs')")
         pids = [pid for pid in self.peers if anchor.owner_of(pid) == shard]
+        if kill_worker:
+            anchor.kill_worker(shard)
         self.crash_peers(pids)
         return pids
 
@@ -445,9 +461,9 @@ def simulate_byzantine(bed: Testbed, sched, seekers: Sequence,
         stats.resurrect_pid = live[-1]
         bed.crash_peers([stats.resurrect_pid])
         bed.anchor.deregister(stats.resurrect_pid)
-    home = (bed.anchor.owner_of(stats.resurrect_pid)
-            if isinstance(bed.anchor, ShardedAnchorRegistry)
-            and stats.resurrect_pid >= 0 else 0)
+    owner = getattr(bed.anchor, "owner_of", None)
+    home = (owner(stats.resurrect_pid)
+            if owner is not None and stats.resurrect_pid >= 0 else 0)
     rs = relay.stats
     r0 = (rs.rejected_chains, rs.digest_mismatches, rs.quarantines,
           rs.quarantine_drops, rs.deferred_unattested, rs.hb_rejected)

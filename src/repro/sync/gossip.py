@@ -35,7 +35,6 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.configs.base import GTRACConfig
-from repro.core.sharding import ShardedAnchorRegistry
 from repro.core.types import RegistryState
 from repro.sync.delta import HEADER_BYTES, DeltaGapError, ShardDelta, full_delta, make_delta
 from repro.sync.relay import RelayPlane
@@ -43,23 +42,24 @@ from repro.sync.seeker import SeekerCache
 
 
 def registry_n_shards(registry) -> int:
-    """Shard count of any registry (monolithic = 1)."""
-    if isinstance(registry, ShardedAnchorRegistry):
-        return registry.n_shards
-    return 1
+    """Shard count of any registry (monolithic = 1). Duck-typed so the
+    process-backed composer (control_plane/registry.py) publishes
+    through the same endpoints as the in-process registries."""
+    return int(getattr(registry, "n_shards", 1))
 
 
 def registry_version_vector(registry) -> Tuple[int, ...]:
     """Per-shard version vector of any registry (monolithic = 1-vector)."""
-    if isinstance(registry, ShardedAnchorRegistry):
-        return registry.version_vector
+    vv = getattr(registry, "version_vector", None)
+    if vv is not None:
+        return tuple(vv)
     return (registry.version,)
 
 
 def registry_shard_state(registry, shard: int) -> RegistryState:
     """One shard's columnar state with its seq column (monolithic:
     the whole registry is shard 0)."""
-    if isinstance(registry, ShardedAnchorRegistry):
+    if hasattr(registry, "export_shard_state"):
         return registry.export_shard_state(shard)
     if shard != 0:
         raise ValueError(f"monolithic registry has only shard 0, "
@@ -70,7 +70,7 @@ def registry_shard_state(registry, shard: int) -> RegistryState:
 def registry_shard_digest(registry, shard: int) -> int:
     """One shard's content digest (core/digest.py) — the attestation
     digest-verified gossip pushes alongside the version vector."""
-    if isinstance(registry, ShardedAnchorRegistry):
+    if hasattr(registry, "shard_digest"):
         return registry.shard_digest(shard)
     if shard != 0:
         raise ValueError(f"monolithic registry has only shard 0, "
@@ -80,7 +80,7 @@ def registry_shard_digest(registry, shard: int) -> int:
 
 def registry_shard_heartbeats(registry, shard: int) -> np.ndarray:
     """One shard's fresh liveness column (the hb-refresh payload)."""
-    if isinstance(registry, ShardedAnchorRegistry):
+    if hasattr(registry, "export_shard_heartbeats"):
         return registry.export_shard_heartbeats(shard)
     return registry.export_heartbeats()
 
@@ -92,9 +92,14 @@ def registry_poke_liveness(registry, now: float) -> None:
     anchor becomes a version bump the gossip push can advertise. O(#P)
     vectorized compare per round, the same cost as the composed-snapshot
     fast path."""
-    if isinstance(registry, ShardedAnchorRegistry):
-        for sh in registry.shards:
+    shards = getattr(registry, "shards", None)
+    if shards is not None:
+        for sh in shards:
             sh.snapshot(now)
+    elif hasattr(registry, "sync"):
+        # process-backed composer: a pull round refreshes the mirrors
+        # (and their heartbeat columns) the publisher exports from
+        registry.sync(now)
     else:
         registry.snapshot(now)
 

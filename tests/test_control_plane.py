@@ -1,0 +1,523 @@
+"""Out-of-process anchor control plane (repro.control_plane).
+
+Four contracts under test:
+
+* **Parity** — a ``ProcessShardedRegistry`` driven over the pickled
+  message path produces composed snapshots bit-identical to the
+  in-process ``ShardedAnchorRegistry`` twin over the same operation
+  sequence, at S ∈ {1, 4, 16} and under both placement modes.
+* **Determinism** — the RPC timeout / retry / backoff state machine runs
+  on an injectable clock: tests assert the exact backoff schedule and
+  the exact number of deadline expiries, with zero wall-clock sleeps.
+* **Degradation** — an unresponsive shard never blocks the window
+  cadence: its slice serves stale (and trust-discounted via
+  ``routing_view``), writes to it are dropped and counted, and recovery
+  is a single probe per sync.
+* **Chaos** — a SIGKILLed real worker process is detected, its state
+  restored (composer mirror or ``ReplicatedAnchor`` ledger) and the
+  respawned worker re-adopts through the delta protocol's full-sync
+  fallback, with snapshot parity re-established.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GTRACConfig
+from repro.control_plane import (
+    FakeClock,
+    LoopbackTransport,
+    ProcessShardedRegistry,
+    RpcChannel,
+    RpcPolicy,
+    RpcRemoteError,
+    RpcTimeout,
+    ShardHost,
+    WorkerDown,
+)
+from repro.core.failover import ReplicatedAnchor
+from repro.core.sharding import (
+    ShardedAnchorRegistry,
+    make_registry,
+    stable_peer_hash,
+    stable_peer_hash_vec,
+)
+from repro.core.types import ExecReport, HopReport
+
+SNAP_COLS = ("peer_ids", "layer_start", "layer_end", "trust",
+             "latency_ms", "alive")
+
+
+def assert_tables_equal(a, b, msg=""):
+    for col in SNAP_COLS:
+        x, y = getattr(a, col), getattr(b, col)
+        assert np.array_equal(x, y), f"{msg}{col}: {x} != {y}"
+
+
+def loopback_registry(cfg, S, **kw):
+    """Process-backed composer over in-process (but pickle-roundtripped)
+    transports: the exact wire surface, no scheduling nondeterminism."""
+    return ProcessShardedRegistry(
+        cfg, n_shards=S,
+        transport_factory=lambda s: LoopbackTransport(ShardHost(cfg, s)),
+        **kw)
+
+
+def drive_ops(reg, n=30, now0=0.0):
+    """A mixed op sequence covering every mutating control-plane verb."""
+    for pid in range(n):
+        reg.register(pid, (pid % 4) * 2, (pid % 4) * 2 + 2,
+                     now=now0 + pid * 0.1, profile=f"p{pid % 3}",
+                     trust=0.5 + 0.01 * pid, latency_ms=10.0 + pid)
+    reg.heartbeat_all(np.arange(n), now0 + 5.0)
+    reg.apply_report(ExecReport(
+        success=True, chain=[1, 2, 3],
+        hops=[HopReport(1, 12.0, True), HopReport(2, 20.0, True)]))
+    reg.apply_report(ExecReport(
+        success=False, chain=[4, 5],
+        hops=[HopReport(4, 30.0, True), HopReport(5, 250.0, False)],
+        failed_peer=5))
+    for pid in range(0, n, 7):
+        reg.heartbeat(pid, now0 + 6.0)
+    reg.sweep(now0 + 8.0)
+    reg.deregister(3)
+    reg.register(3, 0, 2, now=now0 + 9.0)        # re-register keeps seq
+    reg.set_trust(7, 0.9)
+    reg.register(n, 0, 2, now=now0)              # never heartbeats again
+    reg.heartbeat_all(np.arange(n), now0 + 39.0)
+    expired = reg.sweep(now0 + 40.0, expire_after_s=20.0)
+    assert expired == 1                          # only the silent peer
+    reg.sweep(now0 + 41.0, decay_rate=0.01)
+    return reg.snapshot(now0 + 41.5)
+
+
+# ---------------------------------------------------------------------------
+# Parity with the in-process twin
+# ---------------------------------------------------------------------------
+
+
+class TestComposerParity:
+    @pytest.mark.parametrize("S", [1, 4, 16])
+    def test_snapshot_bit_identical(self, gcfg, S):
+        twin = ShardedAnchorRegistry(gcfg, n_shards=S)
+        with loopback_registry(gcfg, S) as proc:
+            assert_tables_equal(drive_ops(twin), drive_ops(proc),
+                                msg=f"S={S} ")
+
+    def test_layer_affinity_cross_shard_move(self, gcfg):
+        """shard_by='layer': re-registering under a different slot moves
+        the peer between shards; the released seq stamp must ride along
+        so global registration order (and the composed row order) is
+        preserved bit-for-bit."""
+        twin = ShardedAnchorRegistry(gcfg, n_shards=4, shard_by="layer")
+        with loopback_registry(gcfg, 4, shard_by="layer") as proc:
+            for reg in (twin, proc):
+                for pid in range(12):
+                    reg.register(pid, (pid % 3) * 4, (pid % 3) * 4 + 4,
+                                 now=0.1 * pid)
+                # move half the peers to new layer slots (likely new shards)
+                for pid in range(0, 12, 2):
+                    reg.register(pid, ((pid + 1) % 3) * 4,
+                                 ((pid + 1) % 3) * 4 + 4, now=2.0)
+                reg.heartbeat_all(np.arange(12), 3.0)
+            assert_tables_equal(twin.snapshot(4.0), proc.snapshot(4.0))
+            for pid in range(12):
+                assert proc.owner_of(pid) == twin.owner_of(pid)
+
+    def test_peers_view_matches_twin(self, gcfg):
+        twin = ShardedAnchorRegistry(gcfg, n_shards=4)
+        with loopback_registry(gcfg, 4) as proc:
+            drive_ops(twin)
+            drive_ops(proc)
+            a, b = twin.peers, proc.peers
+            assert list(a.keys()) == list(b.keys())    # global seq order
+            for pid in a:
+                ra, rb = a[pid], b[pid]
+                assert (ra.trust, ra.latency_est_ms, ra.successes,
+                        ra.failures, ra.profile) == \
+                       (rb.trust, rb.latency_est_ms, rb.successes,
+                        rb.failures, rb.profile)
+            assert len(twin) == len(proc)
+
+    def test_empty_pull_is_version_stable(self, gcfg):
+        with loopback_registry(gcfg, 2) as proc:
+            proc.register(0, 0, 2, now=0.0)
+            proc.sync(1.0)
+            vec = proc.version_vector
+            proc.sync(2.0)              # nothing changed: versions hold
+            assert proc.version_vector == vec
+
+    def test_hash_vec_matches_scalar(self):
+        ids = np.arange(-3, 500, dtype=np.int64)
+        want = np.array([stable_peer_hash(int(i)) for i in ids])
+        got = stable_peer_hash_vec(ids)
+        assert np.array_equal(got, want)
+
+    def test_make_registry_backend_dispatch(self, gcfg):
+        cfg = dataclasses.replace(gcfg, control_plane="procs")
+        reg = make_registry(cfg, shards=2, backend=None,
+                            shard_by="peer")
+        try:
+            assert isinstance(reg, ProcessShardedRegistry)
+        finally:
+            reg.close()
+        assert isinstance(make_registry(gcfg, shards=2),
+                          ShardedAnchorRegistry)
+        with pytest.raises(ValueError):
+            make_registry(gcfg, shards=2, backend="bogus")
+
+
+# ---------------------------------------------------------------------------
+# RPC determinism: injected clock, exact schedules
+# ---------------------------------------------------------------------------
+
+
+class BlackholeTransport(LoopbackTransport):
+    """Mutable loopback: ``mute`` eats posts (dead-air worker),
+    ``drop_next`` eats the next n replies AFTER servicing them (the
+    lost-reply retry scenario — effects applied, answer lost)."""
+
+    def __init__(self, host):
+        super().__init__(host)
+        self.mute = False
+        self.drop_next = 0
+
+    def post(self, msg):
+        if self.mute:
+            return
+        super().post(msg)
+        if self.drop_next > 0 and self._out:
+            self._out.pop()
+            self.drop_next -= 1
+
+
+class TestRpcDeterminism:
+    POL = RpcPolicy(timeout_s=1.0, retries=2, backoff_base_s=0.05,
+                    backoff_factor=2.0)
+
+    def test_timeout_schedule_exact(self, gcfg):
+        clock = FakeClock()
+        tr = BlackholeTransport(ShardHost(gcfg, 0))
+        tr.mute = True
+        ch = RpcChannel(tr, self.POL, clock)
+        with pytest.raises(RpcTimeout):
+            ch.request("ping")
+        # retries+1 deadline expiries, exponential backoff between them
+        assert ch.stats.rpc_timeouts == 3
+        assert ch.stats.rpc_retries == 2
+        assert clock.sleeps == [0.05, 0.1]
+        assert clock.t == pytest.approx(0.15)    # backoff is the only sleep
+
+    def test_lost_reply_retry_applies_once(self, gcfg):
+        """A reply lost in flight: the retry re-posts the same id and the
+        worker answers from its dedup cache — exactly-once application."""
+        clock = FakeClock()
+        host = ShardHost(gcfg, 0)
+        tr = BlackholeTransport(host)
+        ch = RpcChannel(tr, self.POL, clock)
+        tr.drop_next = 1
+        fresh, rec = ch.request("register", 7, 0, 2, 0.0, "", None, None,
+                                0, None)
+        assert fresh and rec.peer_id == 7
+        assert ch.stats.rpc_retries == 1
+        assert host.dedup_hits == 1
+        assert len(host.reg.peers) == 1          # applied once, not twice
+
+    def test_duplicated_reply_is_counted_stale(self, gcfg):
+        host = ShardHost(gcfg, 0)
+        tr = LoopbackTransport(host)
+        real_post = tr.post
+
+        def dup_post(msg):
+            real_post(msg)
+            if tr._out:
+                tr._out.append(tr._out[-1])      # duplicate every reply
+        tr.post = dup_post
+        ch = RpcChannel(tr, self.POL, FakeClock())
+        for pid in range(5):
+            ch.request("register", pid, 0, 2, 0.0, "", None, None, pid,
+                       None)
+        assert len(host.reg.peers) == 5
+        assert ch.stats.stale_replies == 4       # dup drains on next collect
+
+    def test_remote_error_not_retried(self, gcfg):
+        clock = FakeClock()
+        ch = RpcChannel(LoopbackTransport(ShardHost(gcfg, 0)), self.POL,
+                        clock)
+        with pytest.raises(RpcRemoteError, match="AttributeError"):
+            ch.request("no_such_op")
+        assert ch.stats.remote_errors == 1
+        assert ch.stats.rpc_retries == 0 and clock.sleeps == []
+
+    def test_worker_down_beats_retry_loop(self, gcfg):
+        clock = FakeClock()
+        tr = BlackholeTransport(ShardHost(gcfg, 0))
+        ch = RpcChannel(tr, self.POL, clock)
+        tr.mute = True
+        tr._alive = False
+        with pytest.raises(WorkerDown):
+            ch.request("ping")
+        assert clock.sleeps == []                # no pointless backoff
+
+    def test_pipelined_interleaved_replies(self, gcfg):
+        """Replies collected out of posting order are buffered per id —
+        the heartbeat fan-in contract."""
+        host = ShardHost(gcfg, 0)
+        ch = RpcChannel(LoopbackTransport(host), self.POL, FakeClock())
+        rids = [ch.post("register", pid, 0, 2, 0.0, "", None, None, pid,
+                        None) for pid in range(6)]
+        for rid in reversed(rids):               # collect backwards
+            ch.collect(rid)
+        assert len(host.reg.peers) == 6
+        assert ch.stats.rpc_timeouts == 0
+
+
+class TestDegradation:
+    def make(self, gcfg, S=2):
+        clock = FakeClock()
+        transports = {}
+
+        def factory(s):
+            t = transports[s] = BlackholeTransport(ShardHost(gcfg, s))
+            return t
+        reg = ProcessShardedRegistry(
+            gcfg, n_shards=S, clock=clock,
+            policy=RpcPolicy(timeout_s=1.0, retries=2,
+                             backoff_base_s=0.05, backoff_factor=2.0),
+            transport_factory=factory)
+        return reg, transports, clock
+
+    def test_degraded_shard_serves_stale_and_drops_writes(self, gcfg):
+        reg, transports, clock = self.make(gcfg)
+        for pid in range(10):
+            reg.register(pid, 0, 2, now=0.0, trust=0.8)
+        t0 = reg.snapshot(1.0)
+        assert len(t0.peer_ids) == 10
+
+        transports[1].mute = True
+        reg.sync(2.0)
+        assert reg.degraded == {1}
+        assert clock.sleeps == [0.05, 0.1]       # one full retry ladder
+        assert reg.health.rpc_timeouts == 3
+        assert reg.health.degraded_windows == 1
+        # the composed view still carries shard 1's last slice
+        assert len(reg.mirror.materialize(2.0).peer_ids) == 10
+
+        # writes against the sick shard drop (and count) instead of block
+        drops0 = reg.health.dropped_writes
+        sick = [p for p in range(10) if reg.shard_of(p) == 1]
+        reg.set_trust(sick[0], 0.1)
+        reg.heartbeat_all(np.arange(10), 3.0)
+        reg.sync(3.5)                            # flush -> sick buf dropped
+        assert reg.health.dropped_writes > drops0
+        # subsequent syncs probe ONCE: no extra backoff sleeps pile up
+        assert clock.sleeps == [0.05, 0.1]
+        assert reg.health.degraded_windows == 2
+
+        transports[1].mute = False               # recovery
+        reg.sync(4.0)
+        assert reg.degraded == set()
+        assert len(reg.snapshot(5.0).peer_ids) == 10
+        reg.close()
+
+    def test_degraded_register_returns_local_record(self, gcfg):
+        reg, transports, clock = self.make(gcfg)
+        reg.register(0, 0, 2, now=0.0)
+        sick = reg.shard_of(99)
+        transports[sick].mute = True
+        reg.sync(1.0)
+        seq_before = reg._seq_next
+        rec = reg.register(99, 0, 2, now=1.5, trust=0.7)
+        assert rec.peer_id == 99 and rec.trust == 0.7
+        assert reg._seq_next == seq_before       # dropped write: no stamp
+        assert reg.owner_of(99) is None
+        reg.close()
+
+    def test_staleness_grows_and_routing_view_discounts(self, gcfg):
+        """A degraded shard's staleness clock stops; with the stale-round
+        margin on, its rows (and only its rows) get trust-docked — the
+        degradation pricing IS the gossip staleness machinery."""
+        cfg = dataclasses.replace(gcfg, gossip_stale_margin=0.05)
+        reg, transports, clock = self.make(cfg)
+        for pid in range(8):
+            reg.register(pid, 0, 2, now=0.0, trust=0.9)
+        reg.snapshot(1.0)
+        transports[0].mute = True
+        reg.sync(2.0)                # shard 0 degrades
+        reg.sync(30.0)               # probe fails; shard 1 refreshes
+        stale = reg.staleness(30.0)
+        assert stale[0] > 20.0 and stale[1] == 0.0
+        full = reg.mirror.materialize(30.0)
+        view = reg.routing_view(30.0)
+        sick_rows = np.isin(
+            full.peer_ids,
+            [p for p in range(8) if reg.shard_of(p) == 0])
+        assert sick_rows.any() and (~sick_rows).any()
+        assert np.all(view.trust[sick_rows] < full.trust[sick_rows])
+        assert np.all(view.trust[~sick_rows] == full.trust[~sick_rows])
+        reg.close()
+
+
+# ---------------------------------------------------------------------------
+# Real processes: kill -9 chaos, restore, re-adopt
+# ---------------------------------------------------------------------------
+
+
+class TestProcessChaos:
+    def test_real_worker_parity_kill_restart(self, gcfg):
+        with ProcessShardedRegistry(gcfg, n_shards=4) as reg:
+            twin = ShardedAnchorRegistry(gcfg, n_shards=4)
+            t_proc = drive_ops(reg, n=40)
+            t_twin = drive_ops(twin, n=40)
+            assert_tables_equal(t_twin, t_proc, msg="pre-kill ")
+
+            victim = 1
+            reg.kill_worker(victim)
+            assert reg.dead_workers() == [victim]
+            # degraded serving: the cadence keeps going on the stale slice
+            t_deg = reg.snapshot(50.0)
+            assert np.array_equal(t_deg.peer_ids, t_proc.peer_ids)
+            assert reg.health.degraded_windows >= 1
+
+            reg.restart_worker(victim)           # restore from own mirror
+            assert reg.health.worker_restarts == 1
+            assert reg.dead_workers() == []
+            t_back = reg.snapshot(51.0)
+            assert_tables_equal(t_proc, t_back, msg="post-restore ")
+            # ground truth: the respawned worker really holds the rows
+            exports = [reg.channels[s].request("export") for s in range(4)]
+            assert sum(len(e.peer_ids) for e in exports) == \
+                len(t_proc.peer_ids)
+
+    def test_writes_after_restore_land_on_fresh_worker(self, gcfg):
+        with ProcessShardedRegistry(gcfg, n_shards=2) as reg:
+            for pid in range(12):
+                reg.register(pid, 0, 2, now=0.0, trust=0.5)
+            reg.snapshot(1.0)
+            reg.kill_worker(0)
+            reg.restart_worker(0)
+            on0 = [p for p in range(12) if reg.shard_of(p) == 0]
+            reg.set_trust(on0[0], 0.99)
+            t = reg.snapshot(2.0)
+            row = t.peer_ids == on0[0]
+            assert t.trust[row][0] == pytest.approx(0.99)
+
+    def test_replicated_anchor_ledger_restore(self, gcfg):
+        cfg = dataclasses.replace(gcfg, control_plane="procs")
+        rep = ReplicatedAnchor(cfg, n_backups=1, shards=4)
+        prim = rep.primary
+        assert isinstance(prim, ProcessShardedRegistry)
+        assert isinstance(rep.replicas[1], ShardedAnchorRegistry)
+        try:
+            for pid in range(32):
+                rep.register(pid, 0, 2, now=pid * 0.1, trust=0.7)
+            rep.heartbeat_all(np.arange(32), 3.0)
+            prim.sync(3.5)
+            rep.tick(prim.cfg.gossip_period_s + 10.0)   # replicate
+            t0 = rep.snapshot(4.0)
+
+            k = 2
+            prim.kill_worker(k)
+            # ledger restore needs a live worker first
+            with pytest.raises(WorkerDown):
+                rep.restore_shard(k)
+            assert len(rep.snapshot(5.0).peer_ids) == 32   # still serving
+            prim.restart_worker(k)
+            assert rep.restore_shard(k)
+            t2 = rep.snapshot(6.0)
+            assert_tables_equal(t0, t2, msg="ledger-restore ")
+            assert prim.health.worker_restarts == 1
+        finally:
+            prim.close()
+
+    def test_shards_one_backup_speaks_shard_surface(self, gcfg):
+        """A procs primary replicates per shard even at S=1; the backup
+        must be upgraded to the sharded in-process registry."""
+        cfg = dataclasses.replace(gcfg, control_plane="procs")
+        rep = ReplicatedAnchor(cfg, n_backups=1, shards=1)
+        try:
+            assert hasattr(rep.replicas[1], "adopt_shard_state")
+            rep.register(0, 0, 2, now=0.0)
+            rep.primary.sync(0.5)
+            rep.tick(cfg.gossip_period_s + 1.0)
+            assert len(rep.replicas[1].snapshot(1.0).peer_ids) == 1
+        finally:
+            rep.primary.close()
+
+
+# ---------------------------------------------------------------------------
+# Testbed fault injection (the fixed error path + the new chaos mode)
+# ---------------------------------------------------------------------------
+
+
+class TestCrashAnchorShard:
+    def test_unsharded_anchor_rejected_before_any_crash(self, gcfg):
+        from repro.sim.testbed import build_scaling_testbed
+        bed = build_scaling_testbed(16, cfg=gcfg, seed=0, shards=1)
+        with pytest.raises(ValueError, match="sharded anchor"):
+            bed.crash_anchor_shard(0)
+        assert all(p.alive for p in bed.peers.values())   # nothing mutated
+
+    def test_kill_worker_rejected_on_inproc_before_any_crash(self, gcfg):
+        from repro.sim.testbed import build_scaling_testbed
+        bed = build_scaling_testbed(16, cfg=gcfg, seed=0, shards=4)
+        with pytest.raises(ValueError, match="process-backed"):
+            bed.crash_anchor_shard(1, kill_worker=True)
+        assert all(p.alive for p in bed.peers.values())   # guard-first
+
+    def test_kill_worker_on_process_backend(self, gcfg):
+        from repro.sim.testbed import build_scaling_testbed
+        cfg = dataclasses.replace(gcfg, control_plane="procs")
+        bed = build_scaling_testbed(24, cfg=cfg, seed=0, shards=4)
+        try:
+            bed.anchor.snapshot(0.5)
+            pids = bed.crash_anchor_shard(1, kill_worker=True)
+            assert pids and all(not bed.peers[p].alive for p in pids)
+            assert 1 in bed.anchor._dead
+            # the control plane keeps composing around the dead shard
+            t = bed.anchor.snapshot(1.0)
+            assert len(t.peer_ids) == 24
+        finally:
+            bed.anchor.close()
+
+
+# ---------------------------------------------------------------------------
+# Seeded reply scrambling (always-run cousin of the hypothesis property)
+# ---------------------------------------------------------------------------
+
+
+class ScrambleTransport(LoopbackTransport):
+    """Loopback whose reply queue is shuffled (and sometimes duplicated)
+    before every poll — out-of-order, duplicated, interleaved delivery."""
+
+    def __init__(self, host, rng, dup_p=0.2):
+        super().__init__(host)
+        self.rng = rng
+        self.dup_p = dup_p
+
+    def poll(self, timeout_s):
+        if self._out:
+            buf = list(self._out)
+            self.rng.shuffle(buf)
+            if self.rng.random() < self.dup_p:
+                buf.append(buf[self.rng.integers(len(buf))])
+            self._out.clear()
+            self._out.extend(buf)
+        return super().poll(timeout_s)
+
+
+class TestScrambledReplies:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_parity_under_scrambled_delivery(self, gcfg, seed):
+        rng = np.random.default_rng(seed)
+        twin = ShardedAnchorRegistry(gcfg, n_shards=4)
+        reg = ProcessShardedRegistry(
+            gcfg, n_shards=4, clock=FakeClock(),
+            transport_factory=lambda s: ScrambleTransport(
+                ShardHost(gcfg, s), rng))
+        with reg:
+            for rnd in range(3):                 # interleave across rounds
+                now0 = rnd * 100.0
+                a = drive_ops(twin, n=20, now0=now0)
+                b = drive_ops(reg, n=20, now0=now0)
+                assert_tables_equal(a, b, msg=f"seed={seed} round={rnd} ")

@@ -1,0 +1,178 @@
+"""Property tests: composer parity under adversarial reply delivery.
+
+Two layers, both hypothesis-driven (skipped gracefully when hypothesis
+is absent — see ``_hyp``):
+
+* **Channel level** — a transport that reorders and duplicates replies
+  per a drawn schedule, under a full ``ProcessShardedRegistry`` op
+  sequence spanning several sync rounds: composed snapshots must stay
+  bit-identical to the in-process twin, because replies are matched by
+  request id and the worker dedups re-posts.
+* **Delta level** — shard pulls collected in order but *applied* to a
+  mirror in a drawn permutation with drawn duplicates: gaps raise
+  ``DeltaGapError`` and are repaired by the full-sync fallback, after
+  which the mirror must compose exactly the hosts' ground-truth state.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hyp import given, settings, st  # noqa: E402
+
+from repro.configs.base import GTRACConfig  # noqa: E402
+from repro.control_plane import (  # noqa: E402
+    FakeClock,
+    LoopbackTransport,
+    ProcessShardedRegistry,
+    ShardHost,
+)
+from repro.core.sharding import ShardedAnchorRegistry  # noqa: E402
+from repro.core.types import ExecReport, HopReport  # noqa: E402
+from repro.sync.delta import DeltaGapError  # noqa: E402
+from repro.sync.seeker import SeekerCache  # noqa: E402
+
+SNAP_COLS = ("peer_ids", "layer_start", "layer_end", "trust",
+             "latency_ms", "alive")
+
+
+def assert_tables_equal(a, b):
+    for col in SNAP_COLS:
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+
+
+class ScheduledScrambleTransport(LoopbackTransport):
+    """Loopback whose reply queue is permuted/duplicated by a drawn
+    integer schedule (consumed round-robin), so hypothesis shrinks over
+    delivery orders instead of RNG seeds."""
+
+    def __init__(self, host, schedule):
+        super().__init__(host)
+        self.schedule = list(schedule) or [0]
+        self._i = 0
+
+    def _next(self, n):
+        v = self.schedule[self._i % len(self.schedule)]
+        self._i += 1
+        return v % n
+
+    def poll(self, timeout_s):
+        if len(self._out) > 1:
+            buf = list(self._out)
+            # drawn rotation = out-of-order delivery
+            k = self._next(len(buf))
+            buf = buf[k:] + buf[:k]
+            # drawn duplication: re-append one reply
+            if self._next(4) == 0:
+                buf.append(buf[self._next(len(buf))])
+            self._out.clear()
+            self._out.extend(buf)
+        return super().poll(timeout_s)
+
+
+def drive(reg, rounds, n=18):
+    """Multi-round mixed op sequence; returns the final snapshot."""
+    t = None
+    for r in range(rounds):
+        now0 = 50.0 * r
+        for pid in range(n):
+            reg.register(pid, (pid % 3) * 2, (pid % 3) * 2 + 2,
+                         now=now0 + pid * 0.1, trust=0.5 + 0.02 * (pid % 9))
+        reg.heartbeat_all(np.arange(n), now0 + 2.0)
+        reg.apply_report(ExecReport(
+            success=True, chain=[0, 1],
+            hops=[HopReport(0, 10.0, True), HopReport(1, 11.0, True)]))
+        reg.apply_report(ExecReport(
+            success=False, chain=[2],
+            hops=[HopReport(2, 300.0, False)], failed_peer=2))
+        reg.deregister((r + 3) % n)
+        reg.sweep(now0 + 3.0)
+        t = reg.snapshot(now0 + 4.0)
+    return t
+
+
+class TestScrambledChannel:
+    @settings(max_examples=25, deadline=None)
+    @given(schedule=st.lists(st.integers(0, 63), min_size=1, max_size=48),
+           shards=st.integers(1, 5))
+    def test_parity_under_drawn_delivery_order(self, schedule, shards):
+        cfg = GTRACConfig()
+        twin = ShardedAnchorRegistry(cfg, n_shards=shards)
+        reg = ProcessShardedRegistry(
+            cfg, n_shards=shards, clock=FakeClock(),
+            transport_factory=lambda s: ScheduledScrambleTransport(
+                ShardHost(cfg, s), schedule))
+        with reg:
+            a = drive(twin, rounds=3)
+            b = drive(reg, rounds=3)
+            assert_tables_equal(a, b)
+            assert reg.degraded == set()
+
+
+class TestScrambledDeltaApplication:
+    @settings(max_examples=25, deadline=None)
+    @given(order=st.lists(st.integers(0, 10_000), min_size=6, max_size=24),
+           dups=st.lists(st.booleans(), min_size=6, max_size=24),
+           seed=st.integers(0, 2**32 - 1))
+    def test_mirror_converges_after_repair(self, order, dups, seed):
+        """Pulls applied out of order / duplicated across rounds: gapped
+        deltas fail loudly, duplicates are discarded, and one full-pull
+        repair pass per shard re-converges the mirror to ground truth."""
+        S = 3
+        cfg = GTRACConfig()
+        rng = np.random.default_rng(seed)
+        hosts = [ShardHost(cfg, s) for s in range(S)]
+
+        def shard_of(pid):
+            return pid % S
+
+        pulls = []                    # (shard, delta, hb) in true order
+        have = [-1] * S
+        for rnd in range(4):
+            now0 = 10.0 * rnd
+            for pid in rng.integers(0, 30, size=6):
+                hosts[shard_of(pid)].reg.register(
+                    int(pid), 0, 2, now=now0,
+                    trust=float(rng.uniform(0.3, 1.0)))
+            for s in range(S):
+                hosts[s].reg.heartbeat_all(
+                    [p for p in range(30) if shard_of(p) == s], now0 + 1.0)
+            drop = int(rng.integers(0, 30))
+            hosts[shard_of(drop)].reg.deregister(drop)
+            for s in range(S):
+                delta, hb = hosts[s]._op_pull(have[s])
+                have[s] = delta.new_version
+                pulls.append((s, delta, hb))
+
+        mirror = SeekerCache(cfg, S, now=0.0)
+        now = 100.0
+        # drawn application order with drawn duplicates
+        seq = list(range(len(pulls)))
+        perm = sorted(seq, key=lambda i: (order[i % len(order)], i))
+        for i, j in enumerate(perm):
+            reps = 2 if dups[j % len(dups)] else 1
+            for _ in range(reps):
+                s, delta, hb = pulls[j]
+                try:
+                    mirror.apply(delta, now)
+                except DeltaGapError:
+                    continue          # repaired below
+                mirror.refresh_heartbeats(s, np.asarray(hb, np.float64),
+                                          now)
+        # repair pass: one full pull per shard (the anti-entropy path)
+        for s in range(S):
+            delta, hb = hosts[s]._op_pull(-1)
+            if delta.new_version < mirror.version_vector[s]:
+                mirror.invalidate_shard(s)     # regression guard
+            mirror.apply(delta, now)
+            mirror.refresh_heartbeats(s, np.asarray(hb, np.float64), now)
+
+        # ground truth: compose the hosts' exports through a fresh mirror
+        truth = SeekerCache(cfg, S, now=0.0)
+        for s in range(S):
+            delta, hb = hosts[s]._op_pull(-1)
+            truth.apply(delta, now)
+            truth.refresh_heartbeats(s, np.asarray(hb, np.float64), now)
+        assert_tables_equal(truth.materialize(now), mirror.materialize(now))
+        assert mirror.version_vector == truth.version_vector
