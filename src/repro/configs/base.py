@@ -276,6 +276,25 @@ class GTRACConfig:
     # serving window router (serving/batch_router.py): max concurrent
     # streams admitted per token window
     router_max_batch: int = 64
+    # prefill/decode disaggregation (serving/gtrac_serve.run_queue):
+    # with disaggregate on, streams whose prompt exceeds one prefill
+    # chunk run dedicated chunked prefill windows — each stream advances
+    # <= prefill_chunk_tokens per chunk and a window launches at most
+    # router_max_batch prefill tokens total (the decode pool's per-window
+    # token budget), so a long prompt never stalls the decode cadence —
+    # and hand their warm stream to the continuous decode pool on
+    # completion. Off, every stream prefills inline in its first decode
+    # step (the pre-disaggregation behavior).
+    disaggregate: bool = False
+    prefill_chunk_tokens: int = 64
+    # KV-locality-aware routing (serving/kv_cache.KVLocalityTracker +
+    # batch_router): peers holding a stream's warm KV get their effective
+    # edge cost scaled by (1 - kv_reuse_bonus) in that stream's row of
+    # the batched K-best DP, so routing PREFERS the warm chain but never
+    # requires it — the trust floor still masks degraded peers and the
+    # K-best alternates take over when the warm chain's trust collapses.
+    # 0 disables (bit-identical routing to the bonus-free path).
+    kv_reuse_bonus: float = 0.0
     # anchor sharding (core/sharding.py): number of AnchorRegistry shards
     # behind the control plane (1 = monolithic) and the placement key
     # ("peer" = stable peer-id hash, "layer" = layer-slot affinity)

@@ -388,8 +388,10 @@ class RoutePlanner:
             -> Tuple[List[List[List[int]]], List[List[float]]]:
         """R requests' K-best chains from ONE vectorized DP sweep.
 
-        ``weights`` (P,) shared costs; ``masks`` (R, P) per-request
-        pruning (each row its own trust floor). The DP carries an
+        ``weights`` (P,) shared costs, or (R, P) per-request costs (the
+        KV-reuse bonus discounts a stream's warm peers — every other
+        request still shares the base cost row); ``masks`` (R, P)
+        per-request pruning (each row its own trust floor). The DP carries an
         (R, L+1, K) state and reduces every boundary bucket for all
         requests at once — the host-side twin of the device backends
         (``routing_jax.layered_dp_kbest`` / the Pallas kernel), with the
@@ -403,7 +405,8 @@ class RoutePlanner:
         g = self.compile(table)
         L = g.total_layers
         R = masks.shape[0]
-        w = np.where(masks, weights[None, :], _INF)[:, g.order]   # (R, E)
+        wrows = weights if weights.ndim == 2 else weights[None, :]
+        w = np.where(masks, wrows, _INF)[:, g.order]              # (R, E)
         distK = np.full((R, L + 1, k), _INF)
         distK[:, 0, 0] = 0.0
         pedge = np.full((R, L + 1, k), -1, np.int64)

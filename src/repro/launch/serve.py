@@ -14,8 +14,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import GTRACConfig
 from repro.models.api import build_model
+from repro.serving.api import SubmitSpec
 from repro.serving.engine import ServingEngine
-from repro.serving.gtrac_serve import GTRACPipelineServer
+from repro.serving.gtrac_serve import GTRACPipelineServer, latency_summary
+from repro.sim.workload import serving_workload
 
 
 def main(argv=None):
@@ -33,6 +35,35 @@ def main(argv=None):
                     help="gtrac mode: serve all requests concurrently via "
                          "the window-batched router (one batched DP per "
                          "token window) instead of per-token routing")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="windowed serving: long prompts prefill in "
+                         "dedicated chunked windows feeding the decode "
+                         "pool instead of stalling it (requires "
+                         "--windowed)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="T",
+                    help="prefill chunk size in tokens, and the prompt-"
+                         "length threshold above which a stream gets a "
+                         "dedicated prefill lane (default: "
+                         "GTRACConfig.prefill_chunk_tokens)")
+    ap.add_argument("--kv-reuse-bonus", type=float, default=None,
+                    metavar="B",
+                    help="per-request edge-cost discount on peers holding "
+                         "a stream's warm KV, 0..1 (routing prefers, "
+                         "never requires, the warm chain; default: "
+                         "GTRACConfig.kv_reuse_bonus)")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="short (interactive) prompt length")
+    ap.add_argument("--long-prompt-len", type=int, default=96,
+                    help="long prompt length for the prefill-heavy tail")
+    ap.add_argument("--long-fraction", type=float, default=0.0,
+                    help="fraction of requests carrying a long prompt "
+                         "(0 = all short, the classic workload)")
+    ap.add_argument("--burst-every", type=float, default=0.0, metavar="S",
+                    help="windowed serving: arrivals come in bursts "
+                         "spaced S sim-seconds apart (0 = all queued "
+                         "up front)")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="requests per arrival burst (with --burst-every)")
     ap.add_argument("--shards", type=int, default=1,
                     help="anchor registry shards (1 = monolithic; >1 "
                          "partitions peers across S AnchorRegistry shards "
@@ -128,6 +159,9 @@ def main(argv=None):
                  "--algorithm %s does not consume it" % args.algorithm)
     if args.relay and not args.gossip:
         ap.error("--relay rides on the gossip sync plane; add --gossip")
+    if args.disaggregate and not args.windowed:
+        ap.error("--disaggregate splits the window-batched serving loop "
+                 "(run_queue); add --windowed")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -140,8 +174,9 @@ def main(argv=None):
     if args.mode == "engine":
         eng = ServingEngine(cfg, params)
         for _ in range(args.requests):
-            prompt = rng.integers(1, cfg.vocab_size, size=8)
-            eng.submit(prompt, max_new_tokens=args.tokens)
+            prompt = rng.integers(1, cfg.vocab_size, size=args.prompt_len)
+            eng.submit(SubmitSpec(prompt=prompt,
+                                  max_new_tokens=args.tokens))
         done = eng.run_batch()
         for r in done:
             print(f"req {r.request_id}: {list(r.prompt)} -> {r.output}")
@@ -158,8 +193,13 @@ def main(argv=None):
         gossip_kw["cp_rpc_retries"] = args.cp_retries
     if args.cp_backoff is not None:
         gossip_kw["cp_backoff_base_s"] = args.cp_backoff
+    if args.prefill_chunk is not None:
+        gossip_kw["prefill_chunk_tokens"] = args.prefill_chunk
+    if args.kv_reuse_bonus is not None:
+        gossip_kw["kv_reuse_bonus"] = args.kv_reuse_bonus
     gcfg = GTRACConfig(anchor_shards=args.shards, shard_by=args.shard_by,
                        control_plane=args.control_plane,
+                       disaggregate=args.disaggregate,
                        hedge_enabled=args.hedged,
                        gossip_enabled=args.gossip,
                        gossip_fanout=args.gossip_fanout,
@@ -179,9 +219,14 @@ def main(argv=None):
                               algorithm=args.algorithm, seed=args.seed,
                               gcfg=gcfg)
     if args.windowed:
-        for _ in range(args.requests):
-            prompt = rng.integers(1, cfg.vocab_size, size=8)
-            srv.submit(prompt, max_new_tokens=args.tokens)
+        for spec in serving_workload(
+                rng, args.requests, vocab_size=cfg.vocab_size,
+                short_len=args.prompt_len, long_len=args.long_prompt_len,
+                long_fraction=args.long_fraction,
+                max_new_tokens=args.tokens,
+                burst_every_s=args.burst_every,
+                burst_size=args.burst_size):
+            srv.submit(spec)
         done = srv.run_queue()
         ok = 0
         for r in done:
@@ -196,6 +241,15 @@ def main(argv=None):
               f"batched DP calls: {s.device_calls} "
               f"(vs {s.requests} per-token solves)  "
               f"anchor shards: {args.shards}  hedges fired: {hedges}")
+        ls = latency_summary(done)
+        chunks = sum(r.metrics.prefill_chunks for r in done)
+        print(f"ttft p50/p99: {ls['ttft_p50_ms']:.0f}/"
+              f"{ls['ttft_p99_ms']:.0f} ms  "
+              f"itl p50/p99: {ls['itl_p50_ms']:.0f}/"
+              f"{ls['itl_p99_ms']:.0f} ms  "
+              f"kv warm-hit rate: {ls['warm_hit_rate']:.2f}  "
+              f"prefill chunks: {chunks} "
+              f"({'disaggregated' if args.disaggregate else 'inline'})")
         if srv.gossip is not None:
             g = srv.gossip.stats
             stale = max((r.metrics.stale_rounds_max for r in done),
@@ -223,7 +277,7 @@ def main(argv=None):
         return
     ok = 0
     for rid in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size, size=8)
+        prompt = rng.integers(1, cfg.vocab_size, size=args.prompt_len)
         out, met = srv.generate(prompt, max_new_tokens=args.tokens,
                                 request_id=rid)
         ok += met.tokens == args.tokens

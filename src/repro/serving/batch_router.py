@@ -53,22 +53,43 @@ def plan_batched(table: PeerTable, total_layers: int, cfg: GTRACConfig,
                  taus: np.ndarray, *, planner: RoutePlanner,
                  k_best: Optional[int] = None,
                  backend: str = "auto",
-                 interpret: bool = False) -> List[RoutePlan]:
+                 interpret: bool = False,
+                 warm_masks: Optional[np.ndarray] = None,
+                 kv_bonus: float = 0.0) -> List[RoutePlan]:
     """One batched K-best DP -> one ``RoutePlan`` per request.
 
     ``taus`` is the (R,) per-request trust floor vector. Chains longer
     than ``total_layers`` hops are impossible (every peer spans >= 1
     layer), so ``k_max = total_layers`` never truncates a backtrack.
     Infeasible requests get an empty (infeasible) plan.
+
+    ``warm_masks`` (R, P) marks peers holding each request's warm KV
+    (serving/kv_cache.KVLocalityTracker); with ``kv_bonus`` > 0 a warm
+    peer's effective edge cost is scaled by ``1 - kv_bonus`` in that
+    request's DP row only — routing *prefers* the warm chain but the
+    trust-floor mask still prunes degraded peers, so a collapsed warm
+    chain falls back to the K-best alternates with no special casing.
+    The bonus rides the host (numpy) DP: the device backends derive
+    shared costs from the table on device, so a window carrying warm
+    discounts routes on the numpy path regardless of ``backend``
+    (``kv_bonus=0`` or an empty warm set keeps backend dispatch — and
+    plans — bit-identical to the bonus-free path). Plan ``costs`` are
+    then the *discounted* objective: correct for ranking alternates,
+    not a latency estimate.
     """
     k = planner.k_best if k_best is None else int(k_best)
     taus = np.asarray(taus, np.float64)
+    bonus_live = (warm_masks is not None and kv_bonus > 0.0
+                  and bool(np.any(warm_masks)))
     backend = _resolve_backend(backend)
-    if backend == "numpy":
+    if backend == "numpy" or bonus_live:
         w = effective_cost_vec(table.latency_ms, table.trust,
                                cfg.request_timeout_ms)
         masks = table.alive[None, :] & \
             (table.trust[None, :] >= taus[:, None])
+        if bonus_live:
+            w = np.where(warm_masks, w[None, :] * (1.0 - float(kv_bonus)),
+                         w[None, :])
         chains_all, costs_all = planner.solve_kbest_batched(
             table, w, masks, k=k)
         return [RoutePlan(table=table, total_layers=total_layers,
@@ -127,13 +148,24 @@ class BatchRouter:
     interpret: bool = False
     k_best: Optional[int] = None
     stats: RouterStats = field(default_factory=RouterStats)
-    _pending: List[Tuple[int, float]] = field(default_factory=list)
+    _pending: List[Tuple[int, float, Tuple[int, ...]]] = \
+        field(default_factory=list)
     _cache: Optional[Tuple[PeerTable, Tuple, List[RoutePlan]]] = None
 
-    def submit(self, request_id: int, tau: Optional[float] = None) -> None:
-        """Queue a routing request for the current window."""
+    def submit(self, request_id: int, tau: Optional[float] = None,
+               warm_ids=None) -> None:
+        """Queue a routing request for the current window.
+
+        ``warm_ids`` are the peers holding this stream's warm KV
+        (serving/kv_cache.KVLocalityTracker.warm_ids). With
+        ``cfg.kv_reuse_bonus`` > 0 they earn a per-request edge-cost
+        discount in the batched DP; at bonus 0 they are discarded here,
+        so routing stays bit-identical to the bonus-free path."""
         tau = self.cfg.trust_floor if tau is None else float(tau)
-        self._pending.append((int(request_id), tau))
+        warm: Tuple[int, ...] = ()
+        if warm_ids and self.cfg.kv_reuse_bonus > 0.0:
+            warm = tuple(sorted(int(p) for p in warm_ids))
+        self._pending.append((int(request_id), tau, warm))
 
     @property
     def pending(self) -> int:
@@ -141,13 +173,29 @@ class BatchRouter:
 
     def route_window(self, table: PeerTable) -> Dict[int, RoutePlan]:
         """Solve every pending request against ``table`` in one DP call
-        (or zero, when the snapshot and floor set are unchanged)."""
+        (or zero, when the snapshot, floor set, and warm sets are all
+        unchanged). Requests sharing (tau, warm set) share one DP row —
+        with empty warm sets this degenerates to the classic tau dedupe."""
         pending, self._pending = self._pending, []
         if not pending:
             return {}
-        taus = np.array([t for _, t in pending], np.float64)
-        utaus, inverse = np.unique(taus, return_inverse=True)
-        key = (getattr(table, "version", -1), utaus.tobytes(),
+        group_of: Dict[Tuple[float, Tuple[int, ...]], int] = {}
+        for _, tau, warm in pending:
+            group_of.setdefault((tau, warm), 0)
+        skeys = sorted(group_of)
+        for i, k in enumerate(skeys):
+            group_of[k] = i
+        taus = np.array([k[0] for k in skeys], np.float64)
+        warm_sets = tuple(k[1] for k in skeys)
+        any_warm = any(warm_sets)
+        warm_masks = None
+        if any_warm:
+            id2row = {int(p): i for i, p in enumerate(table.peer_ids)}
+            warm_masks = np.zeros((len(skeys), len(table)), bool)
+            for i, warm in enumerate(warm_sets):
+                rows = [id2row[p] for p in warm if p in id2row]
+                warm_masks[i, rows] = True
+        key = (getattr(table, "version", -1), taus.tobytes(), warm_sets,
                self.k_best)
         self.stats.windows += 1
         self.stats.requests += len(pending)
@@ -157,11 +205,13 @@ class BatchRouter:
             self.stats.window_cache_hits += 1
         else:
             plans = plan_batched(table, self.total_layers, self.cfg,
-                                 utaus, planner=self.planner,
+                                 taus, planner=self.planner,
                                  k_best=self.k_best, backend=self.backend,
-                                 interpret=self.interpret)
+                                 interpret=self.interpret,
+                                 warm_masks=warm_masks,
+                                 kv_bonus=self.cfg.kv_reuse_bonus)
             self._cache = (table, key, plans)
             self.stats.device_calls += 1
-            self.stats.unique_floors += len(utaus)
-        return {rid: plans[inverse[i]]
-                for i, (rid, _) in enumerate(pending)}
+            self.stats.unique_floors += len(taus)
+        return {rid: plans[group_of[(tau, warm)]]
+                for rid, tau, warm in pending}

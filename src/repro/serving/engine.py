@@ -2,11 +2,17 @@
 sampling, EOS detection, and a window admission queue (static batching;
 the trust-routed pipeline server in gtrac_serve.py layers G-TRAC on top
 and shares ``AdmissionQueue`` for its window-batched routing loop).
+
+Submission goes through the unified ``SubmitSpec`` surface
+(serving/api.py); the legacy ``submit(prompt, ...)`` keyword form is a
+deprecated shim. Request ids come from the admission queue's monotonic
+counter, never from queue-state arithmetic.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import build_model
+from repro.serving.api import SubmitSpec
 
 
 @dataclass
@@ -27,16 +34,43 @@ class Request:
     # per-request trust floor for trust-routed serving (gtrac_serve.py);
     # None -> the router's configured floor. Plain engines ignore it.
     tau: Optional[float] = None
+    # sim-clock arrival (seconds): admission defers until the window
+    # clock reaches it (0.0 = already arrived, the classic behavior)
+    arrival_time: float = 0.0
+    # stream kind for disaggregated serving: auto | prefill | decode
+    kind: str = "auto"
+
+    @classmethod
+    def from_spec(cls, spec: SubmitSpec, request_id: int) -> "Request":
+        return cls(request_id=int(request_id),
+                   prompt=np.asarray(spec.prompt, np.int32),
+                   max_new_tokens=int(spec.max_new_tokens),
+                   eos_id=spec.eos_id, tau=spec.tau,
+                   arrival_time=float(spec.arrival_time), kind=spec.kind)
+
+
+def _deprecated_submit(owner: str) -> None:
+    warnings.warn(
+        f"{owner}.submit(prompt, ...) keyword form is deprecated; "
+        f"pass a repro.serving.api.SubmitSpec instead",
+        DeprecationWarning, stacklevel=3)
 
 
 class AdmissionQueue:
-    """FIFO admission with window batching.
+    """FIFO admission with window batching and arrival-time gating.
 
     Pending requests are admitted in windows of at most ``max_batch``:
     the plain engine drains whole windows into its static batcher, the
     trust-routed pipeline server tops its active stream set up to the
     window size each token step (continuous batching). Factored out of
     ``ServingEngine`` so both serving layers share one admission policy.
+
+    The queue owns the request-id space: ``next_request_id()`` is a
+    monotonic counter (seeded by ``id_base``), so ids stay unique under
+    any interleaving of submissions and window pops — the old
+    ``len(queue) + admitted`` arithmetic collided as soon as requests
+    entered the queue by any path other than the engine's own submit
+    (hand-built ``Request`` objects, capacity-deferred arrivals).
 
     ``registry`` (any ``repro.core.sharding.Registry`` — monolithic or
     sharded anchor) couples admission to registry hygiene: each window pop
@@ -46,29 +80,57 @@ class AdmissionQueue:
     clean shards no-op without touching their snapshot versions.
     """
 
-    def __init__(self, max_batch: int = 64, registry=None):
+    def __init__(self, max_batch: int = 64, registry=None, id_base: int = 0):
         self.max_batch = int(max_batch)
         self.registry = registry     # Optional[repro.core.sharding.Registry]
         self.pending: List[Request] = []
         self.admitted = 0
         self.swept_peers = 0         # total peers TTL-expired by our sweeps
+        self._next_id = int(id_base)
 
     def __len__(self) -> int:
         return len(self.pending)
 
+    def next_request_id(self) -> int:
+        """Allocate the next request id (monotonic, never reused)."""
+        rid = self._next_id
+        self._next_id += 1
+        return rid
+
     def submit(self, req: Request) -> Request:
+        # explicit ids above the counter advance it past them, so a later
+        # auto-allocated id can never collide with a pinned one
+        self._next_id = max(self._next_id, req.request_id + 1)
         self.pending.append(req)
         return req
 
+    def next_arrival(self) -> Optional[float]:
+        """Earliest pending arrival time (None when the queue is empty) —
+        the window scheduler's idle-jump target."""
+        if not self.pending:
+            return None
+        return min(r.arrival_time for r in self.pending)
+
     def next_window(self, capacity: Optional[int] = None,
                     now: Optional[float] = None) -> List[Request]:
-        """Pop the next admission window (up to min(max_batch, capacity)).
-        When a registry and a clock are supplied, sweep first."""
+        """Pop the next admission window (up to min(max_batch, capacity))
+        of *arrived* requests (``arrival_time <= now``; a missing clock
+        admits everything). When a registry and a clock are supplied,
+        sweep first."""
         if self.registry is not None and now is not None:
             self.swept_peers += self.registry.sweep(now)
         n = self.max_batch if capacity is None \
             else max(0, min(self.max_batch, capacity))
-        window, self.pending = self.pending[:n], self.pending[n:]
+        if now is None:
+            window, self.pending = self.pending[:n], self.pending[n:]
+        else:
+            window, rest = [], []
+            for r in self.pending:
+                if len(window) < n and r.arrival_time <= now:
+                    window.append(r)
+                else:
+                    rest.append(r)
+            self.pending = rest
         self.admitted += len(window)
         return window
 
@@ -81,6 +143,28 @@ class AdmissionQueue:
         for r in reqs:
             groups.setdefault(len(r.prompt), []).append(r)
         return groups
+
+    @staticmethod
+    def split_by_kind(reqs: List[Request], prefill_threshold: int)\
+            -> Tuple[List[Request], List[Request]]:
+        """Classify a window into (prefill, decode) streams.
+
+        The prompt-length buckets decide the split: buckets longer than
+        ``prefill_threshold`` (one prefill chunk) become dedicated
+        prefill streams; the rest prefill inline in their first decode
+        step. A request's explicit ``kind`` ("prefill"/"decode")
+        overrides its bucket."""
+        prefill: List[Request] = []
+        decode: List[Request] = []
+        for length, group in sorted(
+                AdmissionQueue.by_prompt_length(reqs).items()):
+            for r in group:
+                if r.kind == "prefill" or \
+                        (r.kind == "auto" and length > prefill_threshold):
+                    prefill.append(r)
+                else:
+                    decode.append(r)
+        return prefill, decode
 
 
 class ServingEngine:
@@ -101,11 +185,20 @@ class ServingEngine:
     def queue(self) -> List[Request]:
         return self.admission.pending
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+    def submit(self, spec, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(len(self.queue) + self.admission.admitted,
-                      np.asarray(prompt, np.int32), max_new_tokens, eos_id)
-        return self.admission.submit(req)
+        """Queue one stream. ``spec`` is a ``SubmitSpec`` (the canonical
+        surface); passing a raw prompt array with keywords is the
+        deprecated PR-2-era form and forwards through a shim."""
+        if not isinstance(spec, SubmitSpec):
+            _deprecated_submit("ServingEngine")
+            spec = SubmitSpec(prompt=spec,
+                              max_new_tokens=(16 if max_new_tokens is None
+                                              else max_new_tokens),
+                              eos_id=eos_id)
+        rid = (self.admission.next_request_id()
+               if spec.request_id is None else spec.request_id)
+        return self.admission.submit(Request.from_spec(spec, rid))
 
     def run_batch(self, reqs: Optional[List[Request]] = None,
                   greedy: bool = True, temperature: float = 1.0,

@@ -11,12 +11,24 @@ payloads are stateless (full-prefix recompute per token), matching the
 paper's testbed semantics and making Bounded One-Shot Repair trivially
 correct: a replacement peer needs no KV-state transfer.
 
+Peers do, however, retain per-stream KV for their own stage, so the
+window-batched loop (``run_queue``) prices every hop by the tokens it must
+*freshly* process: a hop routed back to a warm peer pays for the increment,
+a cold hop recomputes the prefix (serving/kv_cache.KVLocalityTracker).
+``cfg.kv_reuse_bonus`` folds that locality into routing as a per-request
+edge-cost discount — the batched K-best DP prefers, never requires, the
+warm chain. ``cfg.disaggregate`` splits admission windows by prompt length
+(AdmissionQueue.split_by_kind): long prompts prefill in dedicated chunked
+windows (``cfg.prefill_chunk_tokens`` per chunk, at most the decode token
+budget per window) that run asynchronously against the decode cadence and
+hand their warm streams to the continuous decode pool.
+
 This powers examples/serve_gtrac.py and the integration tests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,12 +41,15 @@ from repro.core.planner import RoutePlanner, plan_route
 from repro.core.registry import SeekerCache
 from repro.core.routing import ALGORITHMS
 from repro.core.sharding import make_registry
+from repro.core.types import HopReport
 from repro.distributed.pipeline import StagePartition
 from repro.models.common import apply_norm, embed_tokens, logits_head
 from repro.models.rope import positional_angles
 from repro.models.transformer import block_forward
+from repro.serving.api import SubmitSpec
 from repro.serving.batch_router import BatchRouter
-from repro.serving.engine import AdmissionQueue, Request
+from repro.serving.engine import AdmissionQueue, Request, _deprecated_submit
+from repro.serving.kv_cache import KVLocalityTracker
 from repro.sim.peers import PROFILES, SimPeer, make_peer
 from repro.sim.testbed import Testbed
 from repro.sync.gossip import make_sync_plane
@@ -131,6 +146,45 @@ class ServeMetrics:
     shard_timeouts: int = 0
     degraded_windows: int = 0
     worker_restarts: int = 0
+    # streaming latency: sim-clock emission stamp (ms) of every token and
+    # time-to-first-token relative to the request's arrival_time; ITL is
+    # the diff of consecutive emission stamps (see ``itl_ms``)
+    ttft_ms: float = -1.0                  # -1 until the first token lands
+    emit_ms: List[float] = field(default_factory=list)
+    # disaggregated serving (cfg.disaggregate): dedicated prefill windows
+    # executed for this stream before it joined the decode pool
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
+    # KV locality (serving/kv_cache.py): decode steps whose routed chain
+    # held the stream's warm KV end to end vs. steps routed off it and
+    # recomputing (first-contact steps with nothing to reuse count as
+    # neither)
+    kv_warm_hits: int = 0
+    kv_cold_steps: int = 0
+
+    def itl_ms(self) -> List[float]:
+        """Inter-token latencies: diffs of consecutive emission stamps."""
+        e = self.emit_ms
+        return [b - a for a, b in zip(e, e[1:])]
+
+
+def latency_summary(reqs: Sequence["RoutedRequest"]) -> Dict[str, float]:
+    """Aggregate p50/p99 TTFT + inter-token latency and the warm-chain
+    hit rate over a set of served streams (launch/serve.py, benchmarks).
+    Percentiles are -1.0 when no samples exist."""
+
+    def pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(xs, q)) if xs else -1.0
+
+    ttfts = [r.metrics.ttft_ms for r in reqs if r.metrics.ttft_ms >= 0]
+    itls: List[float] = []
+    for r in reqs:
+        itls += r.metrics.itl_ms()
+    warm = sum(r.metrics.kv_warm_hits for r in reqs)
+    cold = sum(r.metrics.kv_cold_steps for r in reqs)
+    return {"ttft_p50_ms": pct(ttfts, 50), "ttft_p99_ms": pct(ttfts, 99),
+            "itl_p50_ms": pct(itls, 50), "itl_p99_ms": pct(itls, 99),
+            "warm_hit_rate": warm / max(1, warm + cold)}
 
 
 @dataclass
@@ -141,6 +195,12 @@ class RoutedRequest(Request):
     tokens: Optional[jnp.ndarray] = None    # (1, S) running token tensor
     # ChainExecutor, or HedgedChainExecutor when cfg.hedge_enabled
     executor: Optional[object] = None
+    # disaggregated prefill progress: prompt tokens prefilled so far, the
+    # sim time the in-flight chunk completes, and the first decode token
+    # computed by the final chunk (emitted at promotion time)
+    prefill_pos: int = 0
+    busy_until: float = 0.0
+    _pending_tok: int = 0
 
 
 class GTRACPipelineServer:
@@ -209,18 +269,29 @@ class GTRACPipelineServer:
         # window are solved in ONE batched device DP (serving/batch_router)
         self.router = BatchRouter(planner=self.planner, cfg=self.gcfg,
                                   total_layers=cfg.num_layers)
-        # admission owns the per-window registry sweep: with a sharded
-        # anchor it fans out per shard (clean shards no-op zero-copy)
+        # admission owns the per-window registry sweep (per-shard fan-out
+        # when the anchor is sharded) AND the request-id space: ids come
+        # from its monotonic counter, seeded clear of generate()'s
         self.admission = AdmissionQueue(max_batch=self.gcfg.router_max_batch,
-                                        registry=anchor)
-        self._next_rid = 10_000   # submit() ids; clear of generate()'s
+                                        registry=anchor, id_base=10_000)
+        # which peers hold which stream's warm KV — prices hops by freshly
+        # processed tokens and feeds the router's chain-reuse bonus
+        self.kv = KVLocalityTracker()
+        # (request_id, peer_id) -> rescale factor for the last multi-token
+        # hop charge; consumed by _apply_report before the anchor EMA
+        self._tok_scale: Dict[Tuple[int, int], float] = {}
         self._stage_of = {}  # layer_start -> stage idx
         for i in range(self.partition.n_stages):
             self._stage_of[self.partition.segment(i)[0]] = i
 
     # -- hop adapter -----------------------------------------------------------
 
-    def _hop_fn(self, request_id: int):
+    def _hop_fn(self, request_id: int, kv_tracked: bool = False):
+        """Hop closure for one stream. With ``kv_tracked`` (the window
+        loop) a hop is charged for the tokens it freshly processes —
+        prefix length minus the peer's warm KV position — so warm chains
+        decode at incremental cost while cold hops recompute. The default
+        keeps ``generate``'s classic flat per-token charge."""
         def hop(peer_id: int, k: int, payload):
             peer = self.bed.peers[peer_id]
             if not self.bed.reachable(peer_id) or \
@@ -229,7 +300,23 @@ class GTRACPipelineServer:
                 return payload, detect, False
             stage = self._stage_of[peer.layer_start]
             out = self.stage_fns[stage](payload)   # REAL compute
-            return out, peer.hop_latency_ms(self.bed.rng), True
+            ntok = 1
+            if kv_tracked:
+                prefix = int(payload[0].shape[1])
+                ntok = max(1, prefix - self.kv.warm_pos(request_id, peer_id))
+                if ntok > 1:
+                    # latency_est_ms means ONE decode step everywhere
+                    # (routing costs, hedge triggers) — remember how to
+                    # rescale this multi-token observation back to its
+                    # single-token equivalent before the anchor EMA sees
+                    # it, or a prefill chunk / cold recompute makes the
+                    # charged peer look slow and routing ping-pongs
+                    # between replicas, each flip paying a full-prefix
+                    # recompute.
+                    one = peer.compute_ms(1) + peer.net_delay_ms
+                    full = peer.compute_ms(ntok) + peer.net_delay_ms
+                    self._tok_scale[(request_id, peer_id)] = one / full
+            return out, peer.hop_latency_ms(self.bed.rng, tokens=ntok), True
 
         return hop
 
@@ -261,6 +348,7 @@ class GTRACPipelineServer:
             -> Tuple[np.ndarray, ServeMetrics]:
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
         metrics = ServeMetrics()
+        t_start = self.bed.now
         route_fn = ALGORITHMS[self.algorithm]
         executor = ChainExecutor(self.gcfg, self._hop_fn(request_id))
 
@@ -301,6 +389,9 @@ class GTRACPipelineServer:
                                      axis=1)
             metrics.tokens += 1
             metrics.token_latency_ms.append(report.total_latency_ms)
+            metrics.emit_ms.append(self.bed.now * 1e3)
+            if metrics.ttft_ms < 0:
+                metrics.ttft_ms = (self.bed.now - t_start) * 1e3
         self.bed.peers and [p.forget_request(request_id)
                             for p in self.bed.peers.values()]
         self._mirror_relay_stats(metrics)
@@ -338,21 +429,27 @@ class GTRACPipelineServer:
 
     # -- window-batched serving (the batch router path) ------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+    def submit(self, spec, max_new_tokens: int = 16,
                tau: Optional[float] = None,
                request_id: Optional[int] = None) -> RoutedRequest:
-        """Queue a decode stream for window-batched serving.
+        """Queue a stream for window-batched serving.
 
-        ``tau`` is this request's trust floor (row of the batched DP's
-        tau vector); None uses the configured floor."""
-        if request_id is None:
-            request_id = self._next_rid
-            self._next_rid += 1
-        req = RoutedRequest(request_id=request_id,
-                            prompt=np.asarray(prompt, np.int32),
-                            max_new_tokens=max_new_tokens, tau=tau)
+        ``spec`` is a ``repro.serving.api.SubmitSpec`` — the unified
+        submission surface; its ``tau`` is this request's trust floor
+        (row of the batched DP's tau vector, None = configured floor),
+        ``arrival_time`` defers admission, ``kind`` pins the stream to
+        the prefill/decode split under ``cfg.disaggregate``. Passing a
+        raw prompt array with keywords is the deprecated pre-SubmitSpec
+        form and forwards through a shim."""
+        if not isinstance(spec, SubmitSpec):
+            _deprecated_submit("GTRACPipelineServer")
+            spec = SubmitSpec(prompt=spec, max_new_tokens=max_new_tokens,
+                              tau=tau, request_id=request_id)
+        rid = (self.admission.next_request_id()
+               if spec.request_id is None else spec.request_id)
+        req = RoutedRequest.from_spec(spec, rid)
         req.tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        hop = self._hop_fn(request_id)
+        hop = self._hop_fn(rid, kv_tracked=True)
         # hedged window serving: behind cfg.hedge_enabled each stream runs
         # the hedging executor (fires a backup hop when the primary exceeds
         # hedge_quantile_factor x its latency estimate); plans splice
@@ -363,32 +460,181 @@ class GTRACPipelineServer:
             if self.gcfg.hedge_enabled else ChainExecutor(self.gcfg, hop))
         return self.admission.submit(req)
 
+    def _emit_token(self, req: RoutedRequest, tok: int,
+                    t_emit: float) -> None:
+        """Append one generated token and stamp its emission time."""
+        req.tokens = jnp.concatenate(
+            [req.tokens, jnp.full((1, 1), int(tok), jnp.int32)], axis=1)
+        req.output.append(int(tok))
+        req.metrics.tokens += 1
+        req.metrics.emit_ms.append(t_emit * 1e3)
+        if req.metrics.ttft_ms < 0:
+            req.metrics.ttft_ms = (t_emit - req.arrival_time) * 1e3
+        if (req.eos_id is not None and int(tok) == req.eos_id) or \
+                len(req.output) >= req.max_new_tokens:
+            req.done = True
+
+    def _finish_stream(self, req: RoutedRequest) -> None:
+        """Stream left the pools: reclaim KV slots and failure draws."""
+        rid = req.request_id
+        self.kv.drop_stream(rid)
+        for key in [k for k in self._tok_scale if k[0] == rid]:
+            del self._tok_scale[key]
+        for p in self.bed.peers.values():
+            p.forget_request(rid)
+
+    def _normalized_report(self, request_id: int, report):
+        """Anchor-facing copy of ``report`` with every multi-token hop
+        charge rescaled to its single-token equivalent. The wall latency
+        (sim clock, TTFT/ITL stamps) keeps the real multi-token cost;
+        only the trust plane's ``latency_est_ms`` EMA — whose unit is one
+        decode step — is fed the normalized observation. Jitter survives:
+        the rescale is a deterministic factor on the drawn latency."""
+        hops, changed = [], False
+        for h in report.hops:
+            s = self._tok_scale.pop((request_id, h.peer_id), None)
+            if s is not None and h.success:
+                hops.append(HopReport(h.peer_id, h.latency_ms * s, True))
+                changed = True
+            else:
+                hops.append(h)
+        return replace(report, hops=hops) if changed else report
+
+    def _apply_report(self, req: RoutedRequest, report) -> None:
+        """Fold one chain execution's outcome into trust + metrics."""
+        anchor_rep = self._normalized_report(req.request_id, report)
+        for rep in split_reports(anchor_rep):
+            self.bed.anchor.apply_report(rep)
+        req.metrics.repairs += int(report.repaired)
+        req.metrics.rerouted += int(report.repaired)
+        stats = getattr(req.executor, "stats", None)
+        if stats is not None:         # hedged executor: surface counts
+            req.metrics.hedges_fired = stats.hedges_fired
+            req.metrics.hedges_won = stats.hedges_won
+
     def run_queue(self) -> List[RoutedRequest]:
-        """Serve every queued stream to completion, one token per stream
-        per window. Each window: one registry sweep (vectorized TTL /
-        trust decay), one seeker sync check, ONE batched device DP for
-        all active streams' routes, then chain execution per stream.
-        Streams run concurrently, so the sim clock advances by the
-        window's max chain latency, and newly queued requests are
-        admitted as capacity frees up (continuous batching)."""
+        """Serve every queued stream to completion under continuous
+        window batching. Each window: one registry sweep (vectorized TTL
+        / trust decay), one seeker sync check, one KV-locality
+        validation, ONE batched device DP for all runnable streams'
+        routes, then chain execution per stream.
+
+        Decode streams run one token per window and advance the sim
+        clock by the window's max decode-chain latency. Under
+        ``cfg.disaggregate``, long-prompt streams instead prefill in
+        dedicated chunked windows: each window launches at most the
+        decode token budget (``cfg.router_max_batch`` tokens) of prefill
+        chunks, a launched chunk occupies its stream until ``busy_until``
+        (asynchronous — decode cadence is NOT stretched by prefill
+        compute), and the final chunk's logits yield the first token, at
+        which point the now-warm stream joins the decode pool. When
+        nothing is runnable the clock jumps to the next chunk completion
+        or pending arrival."""
         served: List[RoutedRequest] = []
-        active: List[RoutedRequest] = []
-        while active or len(self.admission):
+        active: List[RoutedRequest] = []      # decode pool
+        prefill: List[RoutedRequest] = []     # dedicated prefill streams
+        gcfg = self.gcfg
+        while active or prefill or len(self.admission):
+            now = self.bed.now
             # admission sweeps the registry (per-shard fan-out when the
             # anchor is sharded) before the window is admitted
             admitted = self.admission.next_window(
-                capacity=self.admission.max_batch - len(active),
-                now=self.bed.now)
-            active += admitted
+                capacity=self.admission.max_batch - len(active)
+                - len(prefill), now=now)
             served += admitted
+            if gcfg.disaggregate:
+                pre, dec = AdmissionQueue.split_by_kind(
+                    admitted, gcfg.prefill_chunk_tokens)
+            else:
+                pre, dec = [], admitted
+            for req in pre:
+                req.busy_until = now
+            prefill += pre
+            active += dec
+            # promote prefill streams whose final chunk has completed:
+            # emit the pending first token (stamped at chunk completion)
+            # and hand the warm stream to the decode pool
+            waiting: List[RoutedRequest] = []
+            for req in prefill:
+                if req.prefill_pos >= int(req.tokens.shape[1]) \
+                        and req.busy_until <= now:
+                    self._emit_token(req, req._pending_tok, req.busy_until)
+                    if req.done:
+                        self._finish_stream(req)
+                    else:
+                        active.append(req)
+                else:
+                    waiting.append(req)
+            prefill = waiting
+            # launch prefill chunks up to the per-window token budget —
+            # the decode token budget, so prefill can never claim more
+            # window capacity than a full decode batch would. The budget
+            # protects decode streams; when the decode pool is empty
+            # there is nothing to displace, so every runnable stream
+            # launches (chunk size stays capped at the decode budget)
+            budget = self.admission.max_batch if active else None
+            chunks: List[Tuple[RoutedRequest, int]] = []
+            for req in prefill:
+                if budget is not None and budget <= 0:
+                    break
+                if req.busy_until > now:
+                    continue                   # chunk still in flight
+                c = min(gcfg.prefill_chunk_tokens,
+                        int(req.tokens.shape[1]) - req.prefill_pos,
+                        self.admission.max_batch)
+                if budget is not None:
+                    c = min(c, budget)
+                    budget -= c
+                chunks.append((req, c))
+            if not active and not chunks:
+                # nothing runnable now: jump to the next chunk completion
+                # or the next arrival (bursty workloads)
+                targets = [r.busy_until for r in prefill]
+                nxt_arrival = self.admission.next_arrival()
+                if nxt_arrival is not None and nxt_arrival > now:
+                    targets.append(nxt_arrival)
+                if not targets:
+                    break
+                self.bed.advance(min(targets) - now)
+                continue
             table = self._sync_and_view()
+            self.kv.validate(table, gcfg.trust_floor)
             stale_rounds = (int(self.sync_seeker.staleness_rounds(
                 self.bed.now).max()) if self.sync_seeker is not None else 0)
-            for req in active:
-                self.router.submit(req.request_id, req.tau)
+            for req in active + [r for r, _ in chunks]:
+                self.router.submit(req.request_id, req.tau,
+                                   warm_ids=self.kv.warm_ids(req.request_id))
                 req.metrics.stale_rounds_max = max(
                     req.metrics.stale_rounds_max, stale_rounds)
             plans = self.router.route_window(table)   # ONE batched DP
+            # -- prefill chunk launches (asynchronous: charge busy_until,
+            #    the decode window below does not wait for them) --------
+            fail_ms = 0.0
+            for req, c in chunks:
+                plan = plans[req.request_id]
+                if not plan.feasible:
+                    req.metrics.infeasible += 1
+                    req.done = True
+                    continue
+                end = req.prefill_pos + c
+                report, out = req.executor.execute(
+                    plan.chain_ids(0), table,
+                    payload=(req.tokens[:, :end], None), plan=plan)
+                self._apply_report(req, report)
+                if not report.success:
+                    req.metrics.failures += 1
+                    req.done = True
+                    fail_ms = max(fail_ms, report.total_latency_ms)
+                    continue
+                self.kv.record(req.request_id, report.chain, end)
+                req.metrics.prefill_chunks += 1
+                req.metrics.prefill_tokens += c
+                req.prefill_pos = end
+                req.busy_until = now + report.total_latency_ms / 1e3
+                if end == int(req.tokens.shape[1]):
+                    _, logits = out            # final chunk: first token
+                    req._pending_tok = int(jnp.argmax(logits[:, -1, :], -1)[0])
+            # -- decode window: one token per stream --------------------
             window_ms = 0.0
             for req in active:
                 plan = plans[req.request_id]
@@ -396,39 +642,51 @@ class GTRACPipelineServer:
                     req.metrics.infeasible += 1
                     req.done = True
                     continue
+                prefix = int(req.tokens.shape[1])
                 report, payload = req.executor.execute(
                     plan.chain_ids(0), table, payload=(req.tokens, None),
                     plan=plan)
-                for rep in split_reports(report):
-                    self.bed.anchor.apply_report(rep)
-                req.metrics.repairs += int(report.repaired)
-                req.metrics.rerouted += int(report.repaired)
-                stats = getattr(req.executor, "stats", None)
-                if stats is not None:     # hedged executor: surface counts
-                    req.metrics.hedges_fired = stats.hedges_fired
-                    req.metrics.hedges_won = stats.hedges_won
+                self._apply_report(req, report)
                 window_ms = max(window_ms, report.total_latency_ms)
                 if not report.success:
                     req.metrics.failures += 1
                     req.done = True
                     continue
+                # reuse accounting: only steps where the stream HAD warm
+                # KV somewhere count — a first-contact step (inline
+                # prefill, nothing recorded yet) is neither hit nor miss
+                if self.kv.warm_ids(req.request_id):
+                    if self.kv.chain_warm(req.request_id, report.chain,
+                                          prefix - 1):
+                        req.metrics.kv_warm_hits += 1
+                    else:
+                        req.metrics.kv_cold_steps += 1
+                self.kv.record(req.request_id, report.chain, prefix)
                 _, logits = payload
-                nxt = jnp.argmax(logits[:, -1, :], -1)
-                req.tokens = jnp.concatenate(
-                    [req.tokens, nxt[:, None].astype(jnp.int32)], axis=1)
-                tok = int(nxt[0])
-                req.output.append(tok)
-                req.metrics.tokens += 1
+                tok = int(jnp.argmax(logits[:, -1, :], -1)[0])
                 req.metrics.token_latency_ms.append(report.total_latency_ms)
-                if (req.eos_id is not None and tok == req.eos_id) or \
-                        len(req.output) >= req.max_new_tokens:
-                    req.done = True
-            self.bed.advance(window_ms / 1e3)   # streams run concurrently
+                self._emit_token(req, tok,
+                                 now + report.total_latency_ms / 1e3)
+            # decode streams run concurrently: the clock advances by the
+            # window's max decode latency; a pure-prefill window advances
+            # to its earliest chunk completion instead
+            if active:
+                self.bed.advance(window_ms / 1e3)
+            elif chunks:
+                # ALL in-flight streams, not just this window's launches —
+                # an earlier chunk may complete (and promote) first
+                waits = [r.busy_until for r in prefill
+                         if not r.done and r.busy_until > now]
+                self.bed.advance((min(waits) - now) if waits
+                                 else fail_ms / 1e3)
             for req in active:
                 if req.done:
-                    for p in self.bed.peers.values():
-                        p.forget_request(req.request_id)
+                    self._finish_stream(req)
+            for req, _ in chunks:
+                if req.done:
+                    self._finish_stream(req)
             active = [r for r in active if not r.done]
+            prefill = [r for r in prefill if not r.done]
         for req in served:
             self._mirror_relay_stats(req.metrics)
         return served

@@ -58,9 +58,15 @@ class SimPeer:
     def num_layers(self) -> int:
         return self.layer_end - self.layer_start
 
-    def compute_ms(self) -> float:
-        return (self.num_layers * PER_LAYER_COMPUTE_MS * self.profile.compute_scale
-                + PER_HOP_OVERHEAD_MS)
+    def compute_ms(self, tokens: int = 1) -> float:
+        """Stage compute time for ``tokens`` freshly processed tokens.
+
+        A hop that holds the stream's warm KV only processes the tokens
+        appended since (usually 1 in decode); a cold hop recomputes the
+        whole prefix. Per-layer compute scales with the token count; the
+        per-hop serialisation/dispatch overhead is paid once."""
+        return (max(1, int(tokens)) * self.num_layers * PER_LAYER_COMPUTE_MS
+                * self.profile.compute_scale + PER_HOP_OVERHEAD_MS)
 
     def fails_in_request(self, request_id: int, rng: np.random.Generator)\
             -> bool:
@@ -69,8 +75,13 @@ class SimPeer:
             self._request_draws[request_id] = bool(rng.random() < self.p_fail)
         return self._request_draws[request_id]
 
-    def hop_latency_ms(self, rng: np.random.Generator) -> float:
-        base = self.compute_ms() + self.net_delay_ms
+    def hop_latency_ms(self, rng: np.random.Generator,
+                       tokens: int = 1) -> float:
+        """One hop's wall latency: compute for ``tokens`` new tokens plus
+        network delay, under multiplicative lognormal jitter. The default
+        ``tokens=1`` is the classic decode-step charge, so existing
+        per-token call sites are bit-identical."""
+        base = self.compute_ms(tokens) + self.net_delay_ms
         return float(base * rng.lognormal(0.0, self.jitter))
 
     def forget_request(self, request_id: int) -> None:

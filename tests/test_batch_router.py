@@ -11,6 +11,7 @@ from repro.configs import get_config
 from repro.configs.base import GTRACConfig
 from repro.core.planner import RoutePlanner
 from repro.models.api import build_model
+from repro.serving.api import SubmitSpec
 from repro.serving.batch_router import BatchRouter
 from repro.serving.engine import AdmissionQueue, Request, ServingEngine
 from repro.serving.gtrac_serve import GTRACPipelineServer
@@ -167,7 +168,8 @@ class TestWindowedServer:
         cfg, model, params = tiny
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"golden": 2}, seed=0)
-        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=5)
+        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
+                              max_new_tokens=5))
                 for _ in range(3)]
         done = srv.run_queue()
         want = monolithic_greedy(cfg, model, params, np.arange(1, 9), 5)
@@ -188,7 +190,8 @@ class TestWindowedServer:
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"honeypot": 2, "golden": 2},
                                   seed=1)
-        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=4)
+        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
+                              max_new_tokens=4))
                 for _ in range(6)]
         done = srv.run_queue()
         ok = sum(r.metrics.tokens == 4 for r in done)
@@ -201,7 +204,8 @@ class TestWindowedServer:
         gcfg = GTRACConfig(router_max_batch=2)
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"golden": 2}, gcfg=gcfg, seed=0)
-        reqs = [srv.submit(np.arange(1, 9), max_new_tokens=3)
+        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
+                              max_new_tokens=3))
                 for _ in range(5)]
         done = srv.run_queue()
         assert len(done) == 5
@@ -219,7 +223,7 @@ class TestWindowedServer:
         srv.bed.crash_peers(crashed)
         # long windows: chain latencies advance the clock past the TTL
         for _ in range(60):
-            srv.submit(np.arange(1, 9), max_new_tokens=1)
+            srv.submit(SubmitSpec(prompt=np.arange(1, 9), max_new_tokens=1))
             srv.run_queue()
         assert len(srv.bed.anchor.peers) <= n0 - len(crashed)
 
@@ -249,7 +253,8 @@ class TestAdmissionQueue:
     def test_engine_drains_admission_windows(self, tiny):
         cfg, model, params = tiny
         eng = ServingEngine(cfg, params, max_batch=2)
-        reqs = [eng.submit(np.arange(1, 9), max_new_tokens=2)
+        reqs = [eng.submit(SubmitSpec(prompt=np.arange(1, 9),
+                              max_new_tokens=2))
                 for _ in range(3)]
         done = eng.run_batch()
         assert len(done) == 3 and len(eng.admission) == 0
@@ -315,3 +320,93 @@ class TestRegistrySweep:
         a.sweep(100.0, expire_after_s=gcfg.node_ttl_s)   # everyone dead
         g2 = planner.compile(a.snapshot(100.0))
         assert g2 is not g1 and g2.n_peers == 0
+
+    def test_arrival_time_gating(self):
+        q = AdmissionQueue(max_batch=4)
+        q.submit(Request(0, np.arange(4)))
+        q.submit(Request(1, np.arange(4), arrival_time=10.0))
+        assert q.next_arrival() == 0.0
+        assert [r.request_id for r in q.next_window(now=0.0)] == [0]
+        assert q.next_arrival() == 10.0
+        assert q.next_window(now=5.0) == []          # not arrived yet
+        assert [r.request_id for r in q.next_window(now=10.0)] == [1]
+
+    def test_split_by_kind_buckets_and_overrides(self):
+        reqs = [Request(0, np.arange(4)), Request(1, np.arange(32)),
+                Request(2, np.arange(4), kind="prefill"),
+                Request(3, np.arange(32), kind="decode")]
+        pre, dec = AdmissionQueue.split_by_kind(reqs, prefill_threshold=16)
+        assert sorted(r.request_id for r in pre) == [1, 2]
+        assert sorted(r.request_id for r in dec) == [0, 3]
+
+    def test_monotonic_ids_survive_interleaving(self):
+        """Regression: request ids came from len(queue)+admitted, which
+        collides once windows pop mid-stream or requests enter the queue
+        with pinned ids. The queue-owned counter cannot."""
+        q = AdmissionQueue(max_batch=2)
+        ids = [q.next_request_id() for _ in range(2)]
+        for i in ids:
+            q.submit(Request(i, np.arange(4)))
+        q.next_window(capacity=1)            # drain part of the queue
+        q.submit(Request(9, np.arange(4)))   # pinned explicit id
+        more = [q.next_request_id() for _ in range(3)]
+        assert len(set(ids + [9] + more)) == 6
+        assert min(more) > 9                 # counter advanced past the pin
+
+
+class TestKVReuseBonus:
+    def _anchor_table(self, **kw):
+        cfg = GTRACConfig()
+        anchor = build_layered_anchor(cfg, trust_range=(0.97, 1.0),
+                                      latency_range=(50, 80), **kw)
+        return anchor, anchor.snapshot(0.0)
+
+    def test_bonus_zero_parity_with_warm_hints(self):
+        """kv_reuse_bonus=0 + warm hints must route bit-identically to
+        no hints (the prefer-never-require contract's zero point)."""
+        anchor, t = self._anchor_table()
+        L = 12
+        rng = np.random.default_rng(0)
+        warm = [rng.choice(t.peer_ids, size=3, replace=False).tolist()
+                for _ in range(4)]
+
+        def route(hints):
+            router = BatchRouter(planner=RoutePlanner(L, k_best=3),
+                                 cfg=GTRACConfig(), total_layers=L)
+            for i in range(4):
+                router.submit(i, 0.965 + 0.002 * i,
+                              warm_ids=warm[i] if hints else None)
+            return router.route_window(t)
+
+        a, b = route(True), route(False)
+        for i in range(4):
+            assert a[i].chain_rows == b[i].chain_rows
+            assert a[i].costs == b[i].costs
+
+    def test_bonus_prefers_warm_chain_but_floor_still_prunes(self):
+        anchor, t = self._anchor_table()
+        L = 12
+        base = BatchRouter(planner=RoutePlanner(L, k_best=4),
+                           cfg=GTRACConfig(), total_layers=L)
+        base.submit(0)
+        plan0 = base.route_window(t)[0]
+        assert len(plan0.chain_rows) >= 2
+        best, alt = plan0.chain_rows[0], plan0.chain_rows[1]
+        # deep discount on the (edge-disjoint) runner-up's peers flips
+        # the DP onto the warm chain
+        cfg = GTRACConfig(kv_reuse_bonus=0.9)
+        router = BatchRouter(planner=RoutePlanner(L, k_best=4), cfg=cfg,
+                             total_layers=L)
+        router.submit(0, warm_ids=alt)
+        warm_plan = router.route_window(t)[0]
+        assert warm_plan.chain_rows[0] == alt != best
+        # ...but a warm peer that collapses below the trust floor is
+        # pruned by the mask regardless of its discount: prefer, never
+        # require
+        victim = alt[0]
+        anchor.set_trust(victim, 0.5)
+        t2 = anchor.snapshot(0.0)
+        router.submit(0, warm_ids=alt)
+        pruned = router.route_window(t2)[0]
+        assert pruned.feasible
+        assert victim not in pruned.chain_rows[0]

@@ -8,6 +8,7 @@ from repro.core.hedging import HedgedChainExecutor
 from repro.core.registry import SeekerCache
 from repro.core.routing import gtrac_route
 from repro.core.types import ExecReport, HopReport
+from repro.serving.api import SubmitSpec
 
 
 @pytest.fixture
@@ -159,7 +160,7 @@ class TestHedging:
                                       replicas={"golden": 2}, gcfg=gcfg,
                                       seed=0)
             for _ in range(2):
-                srv.submit(prompt, max_new_tokens=4)
+                srv.submit(SubmitSpec(prompt=prompt, max_new_tokens=4))
             return srv.run_queue()
 
         plain = serve(False)

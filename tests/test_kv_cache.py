@@ -1,0 +1,106 @@
+"""serving/kv_cache.py: capacity helpers and the KV locality tracker."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import GTRACConfig
+from repro.serving.kv_cache import (KVLocalityTracker, cache_bytes,
+                                    grow_cache, make_cache)
+
+from conftest import build_layered_anchor
+
+
+class TestCacheHelpers:
+    def test_cache_bytes_matches_hand_computed_footprint(self):
+        cfg = get_config("gpt2-large").reduced(num_layers=2)
+        B, cap = 3, 17
+        kv = (cfg.num_layers * B * cap * cfg.num_kv_heads * cfg.head_dim
+              * np.dtype(cfg.activation_dtype).itemsize)
+        want = 2 * kv + np.dtype(np.int32).itemsize   # k + v + index scalar
+        assert cache_bytes(cfg, B, cap) == want
+        # and it is exactly the bytes of a concrete cache
+        concrete = make_cache(cfg, B, cap)
+        assert cache_bytes(cfg, B, cap) == sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(concrete)
+            if hasattr(leaf, "dtype"))
+
+    def test_grow_cache_zero_pads_and_preserves(self):
+        cfg = get_config("gpt2-large").reduced(num_layers=2)
+        cache = make_cache(cfg, 1, 4)
+        cache["k"] = cache["k"] + 1.0        # nonzero payload to preserve
+        cache["index"] = jnp.asarray(3, jnp.int32)
+        grown = grow_cache(cache, 7)
+        assert grown["k"].shape[2] == 7 and grown["v"].shape[2] == 7
+        np.testing.assert_array_equal(np.asarray(grown["k"][:, :, :4]),
+                                      np.asarray(cache["k"]))
+        assert float(jnp.abs(grown["k"][:, :, 4:]).sum()) == 0.0
+        # non-KV leaves pass through untouched
+        assert int(grown["index"]) == 3
+        # shrinking is a no-op, never a truncation
+        same = grow_cache(cache, 2)
+        assert same["k"].shape == cache["k"].shape
+
+
+class TestKVLocalityTracker:
+    def test_record_and_queries(self):
+        kv = KVLocalityTracker()
+        kv.record(7, [1, 2, 3], pos=8)
+        assert kv.warm_pos(7, 2) == 8
+        assert kv.warm_pos(7, 9) == 0          # cold peer
+        assert kv.warm_pos(8, 2) == 0          # cold stream
+        assert sorted(kv.warm_ids(7)) == [1, 2, 3]
+        assert kv.warm_chain(7) == (1, 2, 3)
+        assert kv.chain_warm(7, [1, 2, 3], 8)
+        assert not kv.chain_warm(7, [1, 2, 3], 9)   # beyond recorded pos
+        assert not kv.chain_warm(7, [1, 2, 4], 8)   # cold hop in chain
+        kv.record(7, [1, 2, 4], pos=9)              # rerouted chain
+        assert kv.warm_pos(7, 3) == 8               # old hop keeps its KV
+        assert kv.warm_chain(7) == (1, 2, 4)
+        kv.drop_stream(7)
+        assert kv.warm_ids(7) == [] and kv.warm_chain(7) is None
+
+    def test_invalidate_peer_drops_across_streams(self):
+        kv = KVLocalityTracker()
+        kv.record(1, [10, 11], pos=4)
+        kv.record(2, [10, 12], pos=6)
+        assert kv.invalidate_peer(10) == 2
+        assert kv.warm_pos(1, 10) == 0 and kv.warm_pos(2, 10) == 0
+        assert kv.warm_pos(1, 11) == 4
+        assert kv.invalidated_peers == 2
+
+    def test_validate_drops_expired_and_distrusted(self, gcfg):
+        anchor = build_layered_anchor(gcfg, L=4, segments=(2,), replicas=2,
+                                      trust_range=(0.97, 1.0))
+        table = anchor.snapshot(0.0)
+        pids = [int(p) for p in table.peer_ids]
+        kv = KVLocalityTracker()
+        kv.record(1, pids[:2], pos=5)
+        assert kv.validate(table, gcfg.trust_floor) == 0
+        assert kv.warm_chain(1) == tuple(pids[:2])
+        # trust collapse below the floor invalidates that peer's KV entry
+        anchor.set_trust(pids[0], gcfg.trust_floor - 0.1)
+        t2 = anchor.snapshot(0.0)
+        assert kv.validate(t2, gcfg.trust_floor) == 1
+        assert kv.warm_pos(1, pids[0]) == 0
+        assert kv.warm_pos(1, pids[1]) == 5     # survivor untouched
+        assert kv.warm_chain(1) is None          # chain no longer whole
+        assert kv.invalidated_streams == 1
+        # same snapshot object: version-keyed validate is a no-op probe
+        assert kv.validate(t2, gcfg.trust_floor) == 0
+
+    def test_validate_handles_peer_removal(self, gcfg):
+        gcfg = GTRACConfig(ttl_expire_factor=1.0)
+        anchor = build_layered_anchor(gcfg, L=4, segments=(2,), replicas=2)
+        table = anchor.snapshot(0.0)
+        victim = int(table.peer_ids[0])
+        kv = KVLocalityTracker()
+        kv.record(3, [victim], pos=2)
+        # no heartbeats: the sweep TTL-expires every peer out of the registry
+        anchor.sweep(now=1e6)
+        gone = anchor.snapshot(1e6)
+        assert kv.validate(gone, gcfg.trust_floor) == 1
+        assert kv.warm_ids(3) == []

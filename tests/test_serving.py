@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import GTRACConfig
 from repro.models.api import build_model
+from repro.serving.api import SubmitSpec
 from repro.serving.engine import ServingEngine
 from repro.serving.gtrac_serve import GTRACPipelineServer, sample_token
 
@@ -41,7 +42,7 @@ class TestEngine:
         cfg, model, params = tiny
         eng = ServingEngine(cfg, params)
         prompt = np.arange(1, 9)
-        req = eng.submit(prompt, max_new_tokens=5)
+        req = eng.submit(SubmitSpec(prompt=prompt, max_new_tokens=5))
         eng.run_batch([req])
         want = monolithic_greedy(cfg, model, params, prompt, 5)
         assert req.output == want
@@ -49,7 +50,8 @@ class TestEngine:
     def test_engine_batched_requests(self, tiny):
         cfg, model, params = tiny
         eng = ServingEngine(cfg, params)
-        reqs = [eng.submit(np.arange(1, 9) + i, max_new_tokens=4)
+        reqs = [eng.submit(SubmitSpec(prompt=np.arange(1, 9) + i,
+                              max_new_tokens=4))
                 for i in range(3)]
         eng.run_batch(reqs)
         assert all(len(r.output) == 4 for r in reqs)
@@ -150,7 +152,7 @@ class TestGTRACServer:
                                   replicas={"golden": 2}, gcfg=gcfg,
                                   seed=0)
         for _ in range(2):
-            srv.submit(np.arange(1, 9), max_new_tokens=3)
+            srv.submit(SubmitSpec(prompt=np.arange(1, 9), max_new_tokens=3))
         done = srv.run_queue()
         assert all(len(r.output) == 3 for r in done)
         assert srv.gossip.relay is not None
@@ -171,3 +173,104 @@ class TestGTRACServer:
                                     request_id=rid)
             if met.tokens == 4:
                 assert list(out) == want
+
+
+class TestSubmitSpecAPI:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            SubmitSpec(prompt=np.arange(4), kind="bogus")
+        with pytest.raises(ValueError):
+            SubmitSpec(prompt=np.arange(4), max_new_tokens=0)
+        spec = SubmitSpec(prompt=[1, 2, 3])
+        assert spec.prompt.dtype == np.int32 and spec.kind == "auto"
+
+    def test_engine_shim_warns_and_behaves(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(cfg, params)
+        with pytest.deprecated_call():
+            req = eng.submit(np.arange(1, 5), max_new_tokens=2)
+        assert req.max_new_tokens == 2 and req.request_id == 0
+
+    def test_server_shim_warns(self, tiny):
+        cfg, model, params = tiny
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, seed=0)
+        with pytest.deprecated_call():
+            req = srv.submit(np.arange(1, 5), max_new_tokens=2)
+        assert req.request_id == 10_000
+
+    def test_pinned_request_id_advances_counter(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(cfg, params)
+        a = eng.submit(SubmitSpec(prompt=np.arange(4)))
+        b = eng.submit(SubmitSpec(prompt=np.arange(4), request_id=7))
+        c = eng.submit(SubmitSpec(prompt=np.arange(4)))
+        assert (a.request_id, b.request_id, c.request_id) == (0, 7, 8)
+
+
+class TestDisaggregatedServing:
+    def test_long_prompt_chunked_prefill_matches_monolithic(self, tiny):
+        """A stream prefilled in dedicated chunks must emit exactly the
+        tokens monolithic greedy decoding would — chunking and warm
+        promotion change scheduling, never semantics."""
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(disaggregate=True, prefill_chunk_tokens=8,
+                           kv_reuse_bonus=0.25)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, gcfg=gcfg, seed=0)
+        long_p, short_p = np.arange(1, 25), np.arange(1, 7)
+        r1 = srv.submit(SubmitSpec(prompt=long_p, max_new_tokens=4))
+        r2 = srv.submit(SubmitSpec(prompt=short_p, max_new_tokens=4))
+        done = srv.run_queue()
+        assert len(done) == 2
+        assert r1.output == monolithic_greedy(cfg, model, params, long_p, 4)
+        assert r2.output == monolithic_greedy(cfg, model, params, short_p, 4)
+        assert r1.metrics.prefill_chunks == 3        # 24 tokens / 8
+        assert r1.metrics.prefill_tokens == 24
+        assert r2.metrics.prefill_chunks == 0        # inline prefill
+        # emission accounting: TTFT set, stamps nondecreasing, and the
+        # short stream reaches its first token before the chunked one
+        for r in (r1, r2):
+            assert r.metrics.ttft_ms > 0 and len(r.metrics.emit_ms) == 4
+            assert all(b >= a for a, b in zip(r.metrics.emit_ms,
+                                              r.metrics.emit_ms[1:]))
+        assert r2.metrics.ttft_ms < r1.metrics.ttft_ms
+        # warm handoff: the promoted stream decodes on its warm chain
+        assert r1.metrics.kv_warm_hits >= 1
+
+    def test_multi_token_charges_never_poison_latency_ema(self, tiny):
+        """The anchor's latency_est_ms means ONE decode step. Prefill
+        chunks and cold recomputes are charged multi-token wall latency,
+        but the report fed to the EMA must be rescaled to its
+        single-token equivalent — unnormalized, a 8-token chunk makes
+        its peers look ~8x slow, routing flees to the cold replica, and
+        chains ping-pong (each flip a full-prefix recompute)."""
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(disaggregate=True, prefill_chunk_tokens=8,
+                           kv_reuse_bonus=0.25)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, gcfg=gcfg, seed=0)
+        srv.submit(SubmitSpec(prompt=np.arange(1, 25), max_new_tokens=4))
+        srv.run_queue()
+        table = srv.bed.anchor.snapshot(srv.bed.now)
+        for pid, est in zip(table.peer_ids, table.latency_ms):
+            peer = srv.bed.peers[int(pid)]
+            one_tok = peer.compute_ms(1) + peer.net_delay_ms
+            # EMA stays in single-token units (jitter sigma is 0.1; an
+            # unnormalized 8-token chunk would land near 8x one_tok)
+            assert est < 2.0 * one_tok
+        assert not srv._tok_scale               # every charge consumed
+
+    def test_explicit_kind_overrides_bucket(self, tiny):
+        cfg, model, params = tiny
+        gcfg = GTRACConfig(disaggregate=True, prefill_chunk_tokens=8)
+        srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
+                                  replicas={"golden": 2}, gcfg=gcfg, seed=0)
+        pinned_pre = srv.submit(SubmitSpec(prompt=np.arange(1, 7),
+                                           max_new_tokens=2, kind="prefill"))
+        pinned_dec = srv.submit(SubmitSpec(prompt=np.arange(1, 25),
+                                           max_new_tokens=2, kind="decode"))
+        srv.run_queue()
+        assert pinned_pre.metrics.prefill_chunks >= 1
+        assert pinned_dec.metrics.prefill_chunks == 0
+        assert len(pinned_pre.output) == 2 and len(pinned_dec.output) == 2
