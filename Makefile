@@ -25,7 +25,13 @@
 #                       asserted every run, --quick included)
 #   make bench-smoke    CI smoke lane: all five benches in --quick mode
 #                       (tiny N/R, perf gates skipped; writes
-#                        BENCH_*.quick.json, never the tracked JSONs)
+#                        BENCH_*.quick.json, never the tracked JSONs —
+#                        the serving bench's trace-overhead gate,
+#                        tracer-on >= 0.95x tracer-off, runs even here)
+#   make trace-demo     traced windowed serve (examples/edge_sim.py
+#                       --trace): exports /tmp/edge_trace.jsonl,
+#                       schema-validates it, prints the critical-path
+#                       report, asserts the TTFT decomposition identity
 #   make lint           compile-check + ruff (pyflakes fallback). HARD
 #                       dependency: fails if neither linter is installed —
 #                       pip install -r requirements-dev.txt
@@ -39,7 +45,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test bench-routing bench-serving bench-sharding bench-sync \
-	bench-control-plane bench-smoke lint
+	bench-control-plane bench-smoke trace-demo lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -58,6 +64,10 @@ bench-sync:
 
 bench-control-plane:
 	$(PY) -m benchmarks.bench_control_plane
+
+trace-demo:
+	$(PY) examples/edge_sim.py --trace /tmp/edge_trace.jsonl
+	$(PY) -m repro.obs.export --validate /tmp/edge_trace.jsonl
 
 bench-smoke:
 	$(PY) -m benchmarks.bench_scaling --quick

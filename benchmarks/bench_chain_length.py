@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, percentiles
 from repro.sim.testbed import build_paper_testbed
 from repro.sim.workload import run_workload
 
@@ -19,8 +19,9 @@ def run(n_requests: int = 40, seed: int = 11):
                              request_id_base=10_000)
         cl = stats.chain_lengths()
         if len(cl):
+            p50, p90 = percentiles(cl, (50, 90))
             emit(f"chain_length/{algo}", 0.0,
-                 f"median={np.median(cl):.0f} p90={np.percentile(cl, 90):.0f} "
+                 f"median={p50:.0f} p90={p90:.0f} "
                  f"min={cl.min()} max={cl.max()}")
         out[algo] = cl
     # paper structure: SP concentrates on few-hop chains; naive is the most

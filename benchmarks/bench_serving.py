@@ -20,11 +20,18 @@ Emits BENCH_serving.json via benchmarks/common and GATES the results
   * the KV-reuse lane must route > 0.8 of decode steps onto a fully
     warm chain under ``kv_reuse_bonus`` > 0, and at bonus 0 plans must
     be bit-identical with and without warm hints (no routing-parity
-    regression).
+    regression);
+  * the tracing-overhead lane (repro.obs): tracer-ENABLED windowed
+    throughput must hold >= 0.95x the tracer-off run of the identical
+    workload — a same-run ratio, so it is enforced in EVERY mode,
+    --quick included; and (non-quick) the tracer-off windowed tok/s
+    must stay >= 0.98x the previously recorded BENCH_serving.json
+    value (the disabled path's one-attribute-check contract).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -42,6 +49,8 @@ SIZES = (16, 64, 256)
 GATE_ITL_X = 1.5          # disagg decode p99 ITL vs decode-only baseline
 GATE_PREFILL_X = 0.8      # disagg prefill throughput vs inline mixed
 GATE_WARM_RATE = 0.8      # warm-chain hit rate under kv_reuse_bonus
+GATE_TRACE_ON_X = 0.95    # tracer-on windowed tok/s vs tracer-off, same run
+GATE_TRACE_OFF_X = 0.98   # tracer-off windowed tok/s vs prior BENCH json
 
 
 def _per_call_us(fn, reps: int) -> float:
@@ -112,34 +121,40 @@ def bench_end_to_end(seed: int = 0):
     streams, tokens = 4, 6
     prompt = np.arange(1, 9)
 
-    def serve(windowed: bool) -> float:
+    def serve(windowed: bool, reps: int = 3) -> float:
+        # warm-up compile pass, then best-of-reps on fresh servers (the
+        # 24-token window is jax-dispatch dominated, so a single timed
+        # shot scatters ~10% run to run)
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"golden": 2}, seed=seed)
         if windowed:
             for _ in range(streams):
                 srv.submit(SubmitSpec(prompt=prompt, max_new_tokens=tokens))
-            srv.run_queue()     # warm-up compile pass
-            srv2 = GTRACPipelineServer(cfg, params, layers_per_stage=2,
-                                       replicas={"golden": 2}, seed=seed)
-            for _ in range(streams):
-                srv2.submit(SubmitSpec(prompt=prompt,
-                                       max_new_tokens=tokens))
-            t0 = time.perf_counter()
-            done = srv2.run_queue()
-            dt = time.perf_counter() - t0
-            n = sum(r.metrics.tokens for r in done)
+            srv.run_queue()
         else:
-            srv.generate(prompt, max_new_tokens=tokens)  # warm-up
+            srv.generate(prompt, max_new_tokens=tokens)
+        best = 0.0
+        for _ in range(reps):
             srv2 = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                        replicas={"golden": 2}, seed=seed)
-            t0 = time.perf_counter()
-            n = 0
-            for rid in range(streams):
-                _, met = srv2.generate(prompt, max_new_tokens=tokens,
-                                       request_id=rid)
-                n += met.tokens
-            dt = time.perf_counter() - t0
-        return n / dt
+            if windowed:
+                for _ in range(streams):
+                    srv2.submit(SubmitSpec(prompt=prompt,
+                                           max_new_tokens=tokens))
+                t0 = time.perf_counter()
+                done = srv2.run_queue()
+                dt = time.perf_counter() - t0
+                n = sum(r.metrics.tokens for r in done)
+            else:
+                t0 = time.perf_counter()
+                n = 0
+                for rid in range(streams):
+                    _, met = srv2.generate(prompt, max_new_tokens=tokens,
+                                           request_id=rid)
+                    n += met.tokens
+                dt = time.perf_counter() - t0
+            best = max(best, n / dt)
+        return best
 
     tps_loop = serve(windowed=False)
     tps_win = serve(windowed=True)
@@ -148,6 +163,53 @@ def bench_end_to_end(seed: int = 0):
     emit("serving/e2e/tokens_per_s/windowed", 1e6 / tps_win,
          f"{tps_win:.1f}tok_per_s")
     return {"per_token": round(tps_loop, 2), "windowed": round(tps_win, 2)}
+
+
+def bench_trace_overhead(seed: int = 0, quick: bool = False):
+    """Tracer-enabled vs tracer-disabled windowed serving of the
+    IDENTICAL workload, wall clock. Both arms are best-of-N fresh
+    servers after a shared jit warm-up, so the ratio isolates the
+    instrumentation cost (span begin/end + post-hoc hop synthesis on,
+    one ``tracer.enabled`` attribute check off)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    from repro.serving.api import SubmitSpec
+    from repro.serving.gtrac_serve import GTRACPipelineServer
+
+    layers = 2 if quick else 4
+    cfg = get_config("gpt2-large").reduced(num_layers=layers,
+                                           vocab_size=128, remat=False)
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    streams, tokens = (2, 3) if quick else (4, 6)
+    prompt = np.arange(1, 9)
+    reps = 1 if quick else 3
+
+    def tps(trace_enabled: bool) -> float:
+        best = 0.0
+        for _ in range(reps):
+            srv = GTRACPipelineServer(
+                cfg, params, layers_per_stage=layers // 2,
+                replicas={"golden": 2},
+                gcfg=GTRACConfig(trace_enabled=trace_enabled), seed=seed)
+            for _ in range(streams):
+                srv.submit(SubmitSpec(prompt=prompt,
+                                      max_new_tokens=tokens))
+            t0 = time.perf_counter()
+            done = srv.run_queue()
+            dt = time.perf_counter() - t0
+            best = max(best, sum(r.metrics.tokens for r in done) / dt)
+        return best
+
+    tps(False)                   # shared jit warm-up pass
+    off = tps(False)
+    on = tps(True)
+    ratio = on / off
+    emit("serving/trace/tokens_per_s/off", 1e6 / off, f"{off:.1f}tok_per_s")
+    emit("serving/trace/tokens_per_s/on", 1e6 / on,
+         f"{on:.1f}tok_per_s_{ratio:.3f}x_vs_off")
+    return {"off": round(off, 2), "on": round(on, 2),
+            "ratio": round(ratio, 4)}
 
 
 def bench_disaggregation(seed: int = 0, quick: bool = False):
@@ -261,22 +323,45 @@ def run(trials: int = 50, seed: int = 0, quick: bool = False):
     speedups = bench_routing_overhead(cfg, trials, seed, sizes=sizes)
     e2e = None if quick else bench_end_to_end(seed)
     disagg = bench_disaggregation(seed, quick=quick)
+    trace = bench_trace_overhead(seed, quick=quick)
     parity_ok = check_reuse_parity(cfg, seed)
     gate_r = sizes[-1] if quick else GATE_R
     gate_ok = speedups[gate_r] >= GATE_X
+    # tracer-off regression: compare against the PREVIOUSLY tracked
+    # measurement before this run overwrites it (non-quick only — the
+    # quick lane writes its own file and runs on noisy CI hosts)
+    prior_windowed = None
+    if not quick and e2e is not None:
+        try:
+            with open("BENCH_serving.json") as f:
+                prior_windowed = json.load(f).get(
+                    "tokens_per_s", {}).get("windowed")
+        except (OSError, ValueError):
+            prior_windowed = None
+    trace_on_ok = trace["ratio"] >= GATE_TRACE_ON_X
+    trace_off_ok = (prior_windowed is None or e2e is None
+                    or e2e["windowed"] >= GATE_TRACE_OFF_X * prior_windowed)
     emit("serving/gate", 0.0,
          f"batched_vs_loop_at_R{gate_r}:{speedups[gate_r]:.2f}x"
          f"(>= {GATE_X}x:{gate_ok}{'_UNENFORCED' if quick else ''})")
     emit("serving/gate_reuse_parity", 0.0, f"bonus0_parity:{parity_ok}")
+    emit("serving/gate_trace_on", 0.0,
+         f"tracer_on_vs_off:{trace['ratio']:.3f}x"
+         f"(>= {GATE_TRACE_ON_X}x:{trace_on_ok})")
     extra = {"bench": "bench_serving", "trials": trials, "quick": quick,
              "speedup_loop_vs_batched": {
                  str(r): round(s, 3) for r, s in speedups.items()},
              "gate_r": gate_r, "gate_enforced": not quick,
              "disaggregation": disagg,
+             "trace_overhead": trace,
+             "gate_trace_on_0_95x": bool(trace_on_ok),
              "gate_reuse_parity": bool(parity_ok)}
     if not quick:
         # only the real measurement may claim the R=64 gate key
         extra["gate_R64_3x"] = bool(gate_ok)
+        extra["gate_trace_off_0_98x"] = bool(trace_off_ok)
+        if prior_windowed is not None:
+            extra["trace_overhead"]["prior_windowed"] = prior_windowed
     if e2e is not None:
         extra["tokens_per_s"] = e2e
     # quick smoke runs must not clobber the tracked gated measurement
@@ -305,8 +390,25 @@ def run(trials: int = 50, seed: int = 0, quick: bool = False):
             f"<= {GATE_WARM_RATE} under kv_reuse_bonus")
     if not parity_ok:
         failures.append("kv_reuse_bonus=0 routing parity broken")
+    if not trace_off_ok:
+        failures.append(
+            f"tracer-off windowed throughput {e2e['windowed']} tok/s "
+            f"regressed below {GATE_TRACE_OFF_X}x the prior recorded "
+            f"{prior_windowed} tok/s")
+    # the trace-on ratio is a same-run comparison (noise-robust), so it
+    # is enforced even in --quick smoke mode
+    hard_failures = []
+    if not trace_on_ok:
+        hard_failures.append(
+            f"tracer-enabled windowed throughput only "
+            f"{trace['ratio']:.3f}x tracer-off "
+            f"(need >= {GATE_TRACE_ON_X}x)")
     if failures and not quick:
         for f in failures:
+            print(f"GATE FAILED: {f}", file=sys.stderr)
+        sys.exit(1)
+    if hard_failures:
+        for f in hard_failures:
             print(f"GATE FAILED: {f}", file=sys.stderr)
         sys.exit(1)
 

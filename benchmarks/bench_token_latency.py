@@ -2,9 +2,7 @@
 requests), mean + P99 per algorithm × generation length."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit
+from benchmarks.common import emit, percentiles
 from repro.sim.testbed import build_paper_testbed
 from repro.sim.workload import run_workload
 
@@ -23,7 +21,7 @@ def run(n_requests: int = 50, seed: int = 7):
             lats = stats.token_latencies()
             if len(lats):
                 mean_s = lats.mean() / 1e3
-                p99_s = np.percentile(lats, 99) / 1e3
+                (p99_s,) = percentiles(lats / 1e3, (99,))
                 emit(f"token_latency/{algo}/ltok{l_tok}", lats.mean() * 1e3,
                      f"mean={mean_s:.2f}s p99={p99_s:.2f}s n={len(lats)}")
             else:

@@ -1,11 +1,17 @@
 """Benchmark utilities: timing + CSV emission (name,us_per_call,derived)
 plus JSON result files (``write_json``) for machine-readable before/after
-tracking (e.g. BENCH_routing.json from bench_scaling.py)."""
+tracking (e.g. BENCH_routing.json from bench_scaling.py).
+
+``percentiles`` re-exports the repo's single percentile helper
+(repro.obs.metrics) so every bench and BENCH_*.json writer shares one
+implementation and one empty-input sentinel (-1.0)."""
 from __future__ import annotations
 
 import json
 import time
 from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.obs.metrics import percentiles  # noqa: F401  (re-export)
 
 ROWS: List[Tuple[str, float, str]] = []
 

@@ -6,8 +6,16 @@ Ends with the epidemic relay demo: 32 seekers kept current by an anchor
 that only ever pushes to 4 seeds per round — including a seeker that
 cannot reach the anchor at all and converges through its neighbors.
 
+With ``--trace PATH`` it instead runs the compact traced-serving demo:
+a windowed gossip+relay serve with end-to-end tracing (repro.obs) on,
+exports the span trace to PATH, schema-validates it, prints the
+per-request critical-path report, and asserts the TTFT decomposition
+identity (components sum to each request's measured TTFT).
+
     PYTHONPATH=src python examples/edge_sim.py
+    PYTHONPATH=src python examples/edge_sim.py --trace /tmp/edge.jsonl
 """
+import sys
 import time
 
 from repro.configs.base import GTRACConfig
@@ -124,5 +132,49 @@ def main():
           f"behind (bound: ceil(log2 32)+2 = 7)")
 
 
+def trace_demo(path):
+    """Traced windowed serve: gossip + relay + end-to-end tracing, then
+    export, schema-validate, report, and check the TTFT identity."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    from repro.obs.export import export_jsonl, validate_jsonl
+    from repro.obs.report import format_report, ttft_breakdown
+    from repro.serving.api import SubmitSpec
+    from repro.serving.gtrac_serve import GTRACPipelineServer
+
+    print("=== traced windowed serving demo (repro.obs) ===")
+    cfg = get_config("gpt2-large").reduced(num_layers=4, vocab_size=128,
+                                           remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    gcfg = GTRACConfig(trace_enabled=True, gossip_enabled=True,
+                       relay_enabled=True, gossip_seekers=4,
+                       disaggregate=True, prefill_chunk_tokens=4)
+    srv = GTRACPipelineServer(cfg, params, layers_per_stage=2, gcfg=gcfg,
+                              seed=3)
+    for i in range(4):
+        srv.submit(SubmitSpec(prompt=np.arange(1, 9 + 4 * i),
+                              max_new_tokens=4, arrival_time=0.01 * i))
+    done = srv.run_queue()
+    print(f"served {len(done)} streams, "
+          f"{sum(r.metrics.tokens for r in done)} tokens")
+    export_jsonl(srv.trace, path)
+    n, errors = validate_jsonl(path)
+    assert not errors, errors[:5]
+    print(f"trace: {n} spans -> {path} (schema OK)")
+    for row in ttft_breakdown(srv.trace):
+        if row["complete"]:
+            assert abs(row["ttft_sum_ms"] - row["measured_ttft_ms"]) < 1e-6, \
+                row   # the decomposition must tile TTFT exactly
+    print("TTFT decomposition identity holds for every completed stream")
+    print(format_report(srv.trace))
+
+
 if __name__ == "__main__":
-    main()
+    if "--trace" in sys.argv:
+        trace_demo(sys.argv[sys.argv.index("--trace") + 1])
+    else:
+        main()

@@ -382,6 +382,13 @@ class GTRACConfig:
     cp_rpc_retries: int = 2
     cp_backoff_base_s: float = 0.05
     cp_backoff_factor: float = 2.0
+    # observability plane (src/repro/obs/): trace_enabled turns on span
+    # tracing across serving / routing / gossip / relay / control plane
+    # into a bounded ring of trace_capacity completed spans (oldest
+    # evicted). Off, every instrumentation point is a single attribute
+    # check on a shared no-op tracer — no allocation, no clock reads.
+    trace_enabled: bool = False
+    trace_capacity: int = 65536
 
 
 def asdict(cfg) -> dict:

@@ -118,6 +118,16 @@ class ProcessShardedRegistry:
         self._prune_home = False
         self._closed = False
 
+    # -- observability -------------------------------------------------------
+
+    def set_tracer(self, tracer) -> None:
+        """Attach an ``obs.trace`` tracer (rpc clock domain) to every
+        channel — restarted workers' replacement channels inherit it via
+        this same attribute (``restart_worker`` copies ``self.tracer``)."""
+        self.tracer = tracer
+        for ch in self.channels:
+            ch.tracer = tracer
+
     # -- placement -----------------------------------------------------------
 
     def shard_of(self, peer_id: int,
@@ -619,6 +629,8 @@ class ProcessShardedRegistry:
         self.channels[shard] = RpcChannel(
             self._factory(shard), self.policy, self.clock,
             stats=self.health, channel_id=shard)
+        if "tracer" in self.__dict__:      # keep tracing across restarts
+            self.channels[shard].tracer = self.tracer
         self.health.worker_restarts += 1
         self._dead.discard(shard)
         self._hb_buf[shard] = []

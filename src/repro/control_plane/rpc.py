@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Tuple
 
 from repro.configs.base import GTRACConfig
+from repro.obs.trace import NOOP_TRACER
 
 
 class RpcTimeout(RuntimeError):
@@ -107,8 +108,12 @@ class RpcPolicy:
 
 class Transport(Protocol):
     """One worker's message pipe. ``poll`` returns the next reply tuple
-    ``(req_id, ok, payload)`` or raises ``RpcTimeout`` after
-    ``timeout_s`` with nothing to deliver."""
+    — ``(req_id, ok, payload)``, or the span-stamped form
+    ``(req_id, ok, payload, (worker_span_id, service_dur_s))`` from
+    workers that trace their service time — or raises ``RpcTimeout``
+    after ``timeout_s`` with nothing to deliver. Channels unpack both
+    forms, so transports (and test doubles) may pass tuples through
+    opaquely."""
 
     def post(self, msg: Tuple) -> None: ...
 
@@ -136,6 +141,10 @@ class RpcChannel:
     heartbeat fan-in posts to all shards first and collects after, and
     nothing is lost to interleaving."""
 
+    #: span tracer for the rpc clock domain (assigned by the registry
+    #: when tracing is on; the class default is the shared no-op)
+    tracer = NOOP_TRACER
+
     def __init__(self, transport: Transport, policy: RpcPolicy,
                  clock: Optional[Clock] = None,
                  stats: Optional[RpcStats] = None,
@@ -144,6 +153,7 @@ class RpcChannel:
         self.policy = policy
         self.clock: Clock = clock if clock is not None else SystemClock()
         self.stats = stats if stats is not None else RpcStats()
+        self.channel_id = channel_id
         # per-channel ids namespaced by channel so a respawned worker's
         # fresh dedup cache never collides with another shard's ids
         self._next_id = channel_id << 40
@@ -168,38 +178,70 @@ class RpcChannel:
         msg = self._pending.get(req_id)
         if msg is None:
             raise KeyError(f"request {req_id} is not outstanding")
+        tr = self.tracer
+        traced = tr.enabled
+        root = (tr.begin("rpc.collect", cat="rpc", op=msg[1],
+                         req_id=req_id, shard=self.channel_id)
+                if traced else None)
         attempt = 0
-        while True:
-            got = self._wait_one(req_id, pol.timeout_s)
-            if got is not None:
-                self._pending.pop(req_id, None)
-                ok, payload = got
-                if not ok:
-                    self.stats.remote_errors += 1
-                    raise RpcRemoteError(str(payload))
-                return payload
-            self.stats.rpc_timeouts += 1
-            if not self.transport.alive():
-                self._pending.pop(req_id, None)
-                raise WorkerDown(f"request {req_id}: worker is dead")
-            if attempt >= pol.retries:
-                self._pending.pop(req_id, None)
-                raise RpcTimeout(
-                    f"request {req_id}: no reply after "
-                    f"{attempt + 1} attempt(s) of {pol.timeout_s}s")
-            self.clock.sleep(pol.backoff(attempt))
-            attempt += 1
-            self.stats.rpc_retries += 1
-            self.transport.post(msg)   # same id: worker dedups
+        outcome = "ok"
+        try:
+            while True:
+                att = (tr.begin("rpc.attempt", cat="rpc", parent=root,
+                                attempt=attempt) if traced else None)
+                got = self._wait_one(req_id, pol.timeout_s)
+                if got is not None:
+                    self._pending.pop(req_id, None)
+                    ok, payload, stamp = got
+                    if traced:
+                        tr.end(att, ok=bool(ok))
+                        if stamp is not None:
+                            # worker-side service span, measured by the
+                            # worker's own clock and laid back-to-back
+                            # against the attempt's end
+                            tr.add("rpc.worker", att.t1 - stamp[1],
+                                   att.t1, cat="rpc", parent=att,
+                                   worker_span=stamp[0])
+                    if not ok:
+                        self.stats.remote_errors += 1
+                        outcome = "remote_error"
+                        raise RpcRemoteError(str(payload))
+                    return payload
+                if traced:
+                    tr.end(att, ok=False, timeout=True)
+                self.stats.rpc_timeouts += 1
+                if not self.transport.alive():
+                    self._pending.pop(req_id, None)
+                    outcome = "worker_down"
+                    raise WorkerDown(f"request {req_id}: worker is dead")
+                if attempt >= pol.retries:
+                    self._pending.pop(req_id, None)
+                    outcome = "timeout"
+                    raise RpcTimeout(
+                        f"request {req_id}: no reply after "
+                        f"{attempt + 1} attempt(s) of {pol.timeout_s}s")
+                bo = (tr.begin("rpc.backoff", cat="rpc", parent=root,
+                               attempt=attempt) if traced else None)
+                self.clock.sleep(pol.backoff(attempt))
+                if traced:
+                    tr.end(bo)
+                attempt += 1
+                self.stats.rpc_retries += 1
+                self.transport.post(msg)   # same id: worker dedups
+        finally:
+            if traced:
+                tr.end(root, outcome=outcome, attempts=attempt + 1)
 
     def request(self, op: str, *args,
                 policy: Optional[RpcPolicy] = None) -> Any:
         return self.collect(self.post(op, *args), policy=policy)
 
     def _wait_one(self, req_id: int,
-                  timeout_s: float) -> Optional[Tuple[bool, Any]]:
+                  timeout_s: float) -> Optional[Tuple[bool, Any, Any]]:
         """One deadline's worth of polling for ``req_id``. Buffers other
-        outstanding ids' replies; drops (and counts) stale ones."""
+        outstanding ids' replies; drops (and counts) stale ones. Returns
+        ``(ok, payload, stamp)`` where ``stamp`` is the worker's span
+        stamp or ``None`` for un-stamped (legacy 3-tuple) replies."""
         hit = self._replies.pop(req_id, None)
         if hit is not None:
             return hit
@@ -209,17 +251,19 @@ class RpcChannel:
             if remaining <= 0:
                 return None
             try:
-                rid, ok, payload = self.transport.poll(remaining)
+                item = self.transport.poll(remaining)
             except RpcTimeout:
                 return None
+            rid, ok, payload = item[0], item[1], item[2]
+            stamp = item[3] if len(item) > 3 else None
             if rid == req_id:
-                return (ok, payload)
+                return (ok, payload, stamp)
             if rid in self._pending:
                 # keep only the FIRST reply per outstanding id (a retry
                 # raced its original; the worker served both from the
                 # same dedup slot, so they are identical)
                 if rid not in self._replies:
-                    self._replies[rid] = (ok, payload)
+                    self._replies[rid] = (ok, payload, stamp)
                 else:
                     self.stats.stale_replies += 1
             else:

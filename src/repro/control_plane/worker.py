@@ -35,7 +35,8 @@ import os
 import pickle
 import queue as _queue
 import signal
-from typing import Any, Optional, Tuple
+import time as _time
+from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
 
@@ -54,7 +55,8 @@ DEDUP_CACHE = 512
 class ShardHost:
     """One shard's registry + command dispatch (transport-agnostic)."""
 
-    def __init__(self, cfg: GTRACConfig, shard: int):
+    def __init__(self, cfg: GTRACConfig, shard: int,
+                 svc_clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.shard = int(shard)
         self.reg = AnchorRegistry(cfg)
@@ -66,6 +68,13 @@ class ShardHost:
         self._seen: "collections.OrderedDict[int, Tuple[bool, Any]]" = \
             collections.OrderedDict()
         self.dedup_hits = 0
+        # worker-side service-time measurement (cross-process tracing):
+        # the worker's own clock — injectable so tests get exact stamps
+        self.svc_clock = (svc_clock if svc_clock is not None
+                          else _time.perf_counter)
+        self._span_seq = 0
+        self._stamps: "collections.OrderedDict[int, Tuple[int, float]]" = \
+            collections.OrderedDict()
 
     # -- dispatch ------------------------------------------------------------
 
@@ -84,6 +93,25 @@ class ShardHost:
         while len(self._seen) > DEDUP_CACHE:
             self._seen.popitem(last=False)
         return reply
+
+    def handle_stamped(self, req_id: int, op: str,
+                       args: Tuple) -> Tuple[bool, Any, Tuple[int, float]]:
+        """``handle`` plus a worker-side span stamp ``(span_id, dur_s)``
+        — service time measured on the WORKER's clock, shipped in the
+        reply so the composer can lay a cross-process ``rpc.worker``
+        span under its ``rpc.attempt``. A dedup hit returns the
+        original command's stamp (the retry did no new work)."""
+        if req_id in self._seen:
+            ok, payload = self.handle(req_id, op, args)  # counts the hit
+            return ok, payload, self._stamps.get(req_id)
+        t0 = self.svc_clock()
+        ok, payload = self.handle(req_id, op, args)
+        self._span_seq += 1
+        stamp = (self._span_seq, float(self.svc_clock() - t0))
+        self._stamps[req_id] = stamp
+        while len(self._stamps) > DEDUP_CACHE:
+            self._stamps.popitem(last=False)
+        return ok, payload, stamp
 
     # -- membership ----------------------------------------------------------
 
@@ -209,8 +237,8 @@ def worker_main(cfg: GTRACConfig, shard: int, cmd_q, rep_q) -> None:
         if op == "stop":
             rep_q.put((req_id, True, True))
             break
-        ok, payload = host.handle(req_id, op, args)
-        rep_q.put((req_id, ok, payload))
+        ok, payload, stamp = host.handle_stamped(req_id, op, args)
+        rep_q.put((req_id, ok, payload, stamp))
 
 
 class ProcWorker:
@@ -236,7 +264,7 @@ class ProcWorker:
     def post(self, msg: Tuple) -> None:
         self.cmd_q.put(msg)
 
-    def poll(self, timeout_s: float) -> Tuple[int, bool, Any]:
+    def poll(self, timeout_s: float) -> Tuple:
         try:
             return self.rep_q.get(timeout=max(1e-4, float(timeout_s)))
         except _queue.Empty:
@@ -298,10 +326,10 @@ class LoopbackTransport:
             self._alive = False
             self._out.append((req_id, True, True))
             return
-        ok, payload = self.host.handle(req_id, op, args)
-        self._out.append(self._codec((req_id, ok, payload)))
+        ok, payload, stamp = self.host.handle_stamped(req_id, op, args)
+        self._out.append(self._codec((req_id, ok, payload, stamp)))
 
-    def poll(self, timeout_s: float) -> Tuple[int, bool, Any]:
+    def poll(self, timeout_s: float) -> Tuple:
         if not self._out:
             raise RpcTimeout("loopback: no reply buffered")
         return self._out.popleft()

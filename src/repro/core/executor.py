@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import GTRACConfig
 from repro.core.types import ExecReport, HopReport, PeerTable
+from repro.obs.trace import NOOP_TRACER
 
 HopFn = Callable[[int, int, object], Tuple[object, float, bool]]
 
@@ -59,6 +60,10 @@ def find_replacement(table: PeerTable, failed_idx: int, tau: float,
 
 
 class ChainExecutor:
+    #: sim-domain tracer; failover splices emit zero-duration markers
+    #: that nest under whatever span the serving layer has open
+    tracer = NOOP_TRACER
+
     def __init__(self, cfg: GTRACConfig, hop_fn: HopFn):
         self.cfg = cfg
         self.hop_fn = hop_fn
@@ -108,6 +113,10 @@ class ChainExecutor:
                 repair_peer = suffix[0]
                 exec_chain[k:] = suffix
                 self.plan_repairs += 1
+                if self.tracer.enabled:
+                    self.tracer.event("failover.splice", cat="failover",
+                                      via="plan", stage=k, failed_peer=pid,
+                                      repair_peer=repair_peer)
                 continue
             ridx = (find_replacement(table, fidx, tau)
                     if fidx is not None else None)
@@ -118,6 +127,10 @@ class ChainExecutor:
             repaired = True
             repair_peer = int(table.peer_ids[ridx])
             exec_chain[k] = repair_peer
+            if self.tracer.enabled:
+                self.tracer.event("failover.splice", cat="failover",
+                                  via="search", stage=k, failed_peer=pid,
+                                  repair_peer=repair_peer)
             # loop continues at the same k with the swapped peer
 
         return ExecReport(True, exec_chain, hops,

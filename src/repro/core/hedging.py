@@ -21,6 +21,7 @@ from typing import List, Optional, Tuple
 from repro.configs.base import GTRACConfig
 from repro.core.executor import find_replacement, try_plan_splice
 from repro.core.types import ExecReport, HopReport, PeerTable
+from repro.obs.trace import NOOP_TRACER
 
 
 @dataclass
@@ -38,6 +39,9 @@ class HedgedChainExecutor:
     the executor additionally consults the peer table's latency estimates to
     set per-hop hedge triggers.
     """
+
+    #: sim-domain tracer (same marker convention as ChainExecutor)
+    tracer = NOOP_TRACER
 
     def __init__(self, cfg: GTRACConfig, hop_fn, quantile_factor: float = 2.0):
         self.cfg = cfg
@@ -88,6 +92,10 @@ class HedgedChainExecutor:
             if hidx is not None:
                 self.stats.hedges_fired += 1
                 hpid = int(table.peer_ids[hidx])
+                if self.tracer.enabled:
+                    self.tracer.event("hedge.fired", cat="hedge", stage=k,
+                                      peer=pid, hedge_peer=hpid,
+                                      trigger_ms=trigger)
                 hout, hlat, hok = self.hop_fn(hpid, k, payload)
                 if not hok:
                     failed_hedge = hpid
@@ -97,6 +105,11 @@ class HedgedChainExecutor:
                     self.stats.hedges_won += 1
                     if ok:
                         self.stats.latency_saved_ms += lat - hedge_total
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "hedge.won", cat="hedge", stage=k, peer=pid,
+                            hedge_peer=hpid,
+                            saved_ms=(lat - hedge_total if ok else 0.0))
                     hops.append(HopReport(hpid, hedge_total, True))
                     total_ms += hedge_total
                     payload = hout
@@ -126,6 +139,10 @@ class HedgedChainExecutor:
                 repair_peer = suffix[0]
                 exec_chain[k:] = suffix
                 self.plan_repairs += 1
+                if self.tracer.enabled:
+                    self.tracer.event("failover.splice", cat="failover",
+                                      via="plan", stage=k, failed_peer=pid,
+                                      repair_peer=repair_peer)
                 continue
             ridx = find_replacement(table, fidx, tau)
             if ridx is None:
@@ -134,6 +151,10 @@ class HedgedChainExecutor:
             repaired = True
             repair_peer = int(table.peer_ids[ridx])
             exec_chain[k] = repair_peer
+            if self.tracer.enabled:
+                self.tracer.event("failover.splice", cat="failover",
+                                  via="search", stage=k, failed_peer=pid,
+                                  repair_peer=repair_peer)
 
         return ExecReport(True, exec_chain, hops, repaired=repaired,
                           repair_peer=repair_peer,

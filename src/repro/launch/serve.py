@@ -146,6 +146,15 @@ def main(argv=None):
                     help="relay rounds a convicted lying sender stays "
                          "quarantined per receiver (default: "
                          "GTRACConfig.relay_quarantine_rounds)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="gtrac mode: enable end-to-end tracing "
+                         "(repro.obs), write the span trace to PATH and "
+                         "print the per-request critical-path report")
+    ap.add_argument("--trace-format", default="jsonl",
+                    choices=["jsonl", "chrome"],
+                    help="trace file format: JSONL span records, or a "
+                         "Chrome trace-event file for chrome://tracing "
+                         "/ Perfetto (default: jsonl)")
     args = ap.parse_args(argv)
     if args.windowed and args.algorithm != "gtrac":
         ap.error("--windowed routes via the gtrac batch router; "
@@ -213,6 +222,7 @@ def main(argv=None):
                        relay_verify=not args.relay_no_verify,
                        gossip_seekers=(args.relay_seekers if args.relay
                                        else 1),
+                       trace_enabled=args.trace is not None,
                        **gossip_kw)
     srv = GTRACPipelineServer(cfg, params,
                               layers_per_stage=args.layers_per_stage,
@@ -250,6 +260,9 @@ def main(argv=None):
               f"kv warm-hit rate: {ls['warm_hit_rate']:.2f}  "
               f"prefill chunks: {chunks} "
               f"({'disaggregated' if args.disaggregate else 'inline'})")
+        print(f"completion: {ls['completed']}/{ls['requests']} requests "
+              f"emitted ({ls['incomplete']} incomplete, rate "
+              f"{ls['completion_rate']:.2f})")
         if srv.gossip is not None:
             g = srv.gossip.stats
             stale = max((r.metrics.stale_rounds_max for r in done),
@@ -273,6 +286,7 @@ def main(argv=None):
                       f"({rs.quarantine_drops} drops), "
                       f"{rs.hb_rejected} hb rejections")
         _report_control_plane(srv)
+        _dump_trace(srv, args)
         srv.close()
         return
     ok = 0
@@ -288,7 +302,24 @@ def main(argv=None):
               f"{lat:.2f}s/token -> {list(out)}")
     print(f"SSR: {ok}/{args.requests}")
     _report_control_plane(srv)
+    _dump_trace(srv, args)
     srv.close()
+
+
+def _dump_trace(srv, args) -> None:
+    """Export the run's span buffer and print the critical-path report
+    (tracing runs only when --trace was passed)."""
+    if getattr(srv, "trace", None) is None or not args.trace:
+        return
+    from repro.obs.export import export_chrome, export_jsonl
+    from repro.obs.report import format_report
+    if args.trace_format == "chrome":
+        export_chrome(srv.trace, args.trace)
+    else:
+        export_jsonl(srv.trace, args.trace)
+    print(f"trace: {len(srv.trace)} spans -> {args.trace} "
+          f"({args.trace_format}, {srv.trace.dropped} evicted)")
+    print(format_report(srv.trace))
 
 
 def _report_control_plane(srv) -> None:

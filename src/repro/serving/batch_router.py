@@ -24,6 +24,7 @@ DPs): serving converts from O(tokens × DP) to O(windows × batched-DP).
 """
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -34,6 +35,7 @@ from repro.core.planner import RoutePlan, RoutePlanner, _edge_disjoint_order
 from repro.core.routing_jax import route_batched_kbest
 from repro.core.trust import effective_cost_vec
 from repro.core.types import PeerTable
+from repro.obs.trace import NOOP_TRACER
 
 _INF_THRESH = 1.0e38
 
@@ -148,6 +150,9 @@ class BatchRouter:
     interpret: bool = False
     k_best: Optional[int] = None
     stats: RouterStats = field(default_factory=RouterStats)
+    # sim-domain tracer: plan cost is HOST work that advances no sim
+    # time, so it ships as a zero-duration event carrying wall_us
+    tracer: object = NOOP_TRACER
     _pending: List[Tuple[int, float, Tuple[int, ...]]] = \
         field(default_factory=list)
     _cache: Optional[Tuple[PeerTable, Tuple, List[RoutePlan]]] = None
@@ -179,6 +184,8 @@ class BatchRouter:
         pending, self._pending = self._pending, []
         if not pending:
             return {}
+        traced = self.tracer.enabled
+        wall0 = _time.perf_counter() if traced else 0.0
         group_of: Dict[Tuple[float, Tuple[int, ...]], int] = {}
         for _, tau, warm in pending:
             group_of.setdefault((tau, warm), 0)
@@ -199,6 +206,7 @@ class BatchRouter:
                self.k_best)
         self.stats.windows += 1
         self.stats.requests += len(pending)
+        cache_hit = True
         if self._cache is not None and self._cache[0] is table \
                 and self._cache[1] == key:
             plans = self._cache[2]
@@ -213,5 +221,11 @@ class BatchRouter:
             self._cache = (table, key, plans)
             self.stats.device_calls += 1
             self.stats.unique_floors += len(taus)
+            cache_hit = False
+        if traced:
+            self.tracer.event(
+                "route.plan", cat="routing", requests=len(pending),
+                rows=len(taus), cache_hit=cache_hit,
+                wall_us=(_time.perf_counter() - wall0) * 1e6)
         return {rid: plans[group_of[(tau, warm)]]
                 for rid, tau, warm in pending}

@@ -46,6 +46,8 @@ from repro.distributed.pipeline import StagePartition
 from repro.models.common import apply_norm, embed_tokens, logits_head
 from repro.models.rope import positional_angles
 from repro.models.transformer import block_forward
+from repro.obs.metrics import MetricsRegistry, percentiles
+from repro.obs.trace import NOOP_TRACER, TraceBuffer, Tracer
 from repro.serving.api import SubmitSpec
 from repro.serving.batch_router import BatchRouter
 from repro.serving.engine import AdmissionQueue, Request, _deprecated_submit
@@ -169,22 +171,49 @@ class ServeMetrics:
 
 
 def latency_summary(reqs: Sequence["RoutedRequest"]) -> Dict[str, float]:
-    """Aggregate p50/p99 TTFT + inter-token latency and the warm-chain
-    hit rate over a set of served streams (launch/serve.py, benchmarks).
-    Percentiles are -1.0 when no samples exist."""
+    """Aggregate p50/p99 TTFT + inter-token latency, the warm-chain hit
+    rate, and the completion rate over a set of served streams
+    (launch/serve.py, benchmarks). Percentiles are -1.0 when no samples
+    exist (``obs.metrics.percentiles`` — the repo-wide helper).
 
-    def pct(xs: List[float], q: float) -> float:
-        return float(np.percentile(xs, q)) if xs else -1.0
-
+    A stream whose ``ttft_ms`` is still the -1 sentinel never emitted a
+    token (infeasible route, unrepaired failure): it is counted as
+    ``incomplete`` and excluded from the TTFT percentiles rather than
+    silently poisoning them."""
     ttfts = [r.metrics.ttft_ms for r in reqs if r.metrics.ttft_ms >= 0]
     itls: List[float] = []
     for r in reqs:
         itls += r.metrics.itl_ms()
     warm = sum(r.metrics.kv_warm_hits for r in reqs)
     cold = sum(r.metrics.kv_cold_steps for r in reqs)
-    return {"ttft_p50_ms": pct(ttfts, 50), "ttft_p99_ms": pct(ttfts, 99),
-            "itl_p50_ms": pct(itls, 50), "itl_p99_ms": pct(itls, 99),
-            "warm_hit_rate": warm / max(1, warm + cold)}
+    t50, t99 = percentiles(ttfts, (50, 99))
+    i50, i99 = percentiles(itls, (50, 99))
+    n = len(reqs)
+    completed = len(ttfts)
+    return {"ttft_p50_ms": t50, "ttft_p99_ms": t99,
+            "itl_p50_ms": i50, "itl_p99_ms": i99,
+            "warm_hit_rate": warm / max(1, warm + cold),
+            "requests": n, "completed": completed,
+            "incomplete": n - completed,
+            "completion_rate": completed / n if n else -1.0}
+
+
+# ServeMetrics stream field <- obs.MetricsRegistry snapshot keys (summed).
+# A field fills only when every key is present, i.e. when the layer that
+# owns it was wired into the registry — absent layers leave the dataclass
+# defaults, exactly like the old per-layer mirroring did.
+_STREAM_VIEW: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("relay_msgs", ("relay/msgs", "relay/summaries")),
+    ("relay_bytes", ("relay/wire_bytes",)),
+    ("relay_duplicates", ("relay/duplicates",)),
+    ("relay_digest_mismatches", ("relay/digest_mismatches",)),
+    ("relay_rejected_chains", ("relay/rejected_chains",)),
+    ("relay_quarantines", ("relay/quarantines",)),
+    ("shard_rpc_retries", ("control_plane/rpc_retries",)),
+    ("shard_timeouts", ("control_plane/rpc_timeouts",)),
+    ("degraded_windows", ("control_plane/degraded_windows",)),
+    ("worker_restarts", ("control_plane/worker_restarts",)),
+)
 
 
 @dataclass
@@ -283,6 +312,43 @@ class GTRACPipelineServer:
         self._stage_of = {}  # layer_start -> stage idx
         for i in range(self.partition.n_stages):
             self._stage_of[self.partition.segment(i)[0]] = i
+        # unified telemetry plane: every layer's live stats object is a
+        # view in ONE registry — router, gossip, relay (plus the derived
+        # wire-byte total) and the composer's health counters — and the
+        # per-stream ServeMetrics relay/control-plane fields fill from
+        # its snapshot (_fill_stream_metrics), not from hand-written
+        # mirroring per layer
+        self.obs = MetricsRegistry()
+        self.obs.expose("router", self.router.stats)
+        if self.gossip is not None:
+            self.obs.expose("gossip", self.gossip.stats)
+            if self.gossip.relay is not None:
+                rs = self.gossip.relay.stats
+                self.obs.expose("relay", rs)
+                self.obs.derived("relay/wire_bytes", rs.seeker_wire_bytes)
+        if self._cp is not None:
+            self.obs.expose("control_plane", self._cp.health)
+        # end-to-end tracing (cfg.trace_enabled): one sim-clock tracer
+        # shared by routing, serving, executors, gossip and relay, plus
+        # an "rpc" scope on the composer's wall clock so control-plane
+        # spans keep their own time domain in the same buffer. Disabled,
+        # every site sees the shared NOOP_TRACER and pays one attribute
+        # check — no allocation, no clock read.
+        self.trace: Optional[TraceBuffer] = None
+        self.tracer = NOOP_TRACER
+        self._req_spans: Dict[int, object] = {}
+        if self.gcfg.trace_enabled:
+            self.trace = TraceBuffer(self.gcfg.trace_capacity)
+            self.tracer = Tracer(self.trace, clock=lambda: self.bed.now,
+                                 domain="serve")
+            self.router.tracer = self.tracer
+            if self.gossip is not None:
+                self.gossip.tracer = self.tracer
+                if self.gossip.relay is not None:
+                    self.gossip.relay.tracer = self.tracer
+            if self._cp is not None:
+                self._cp.set_tracer(self.tracer.scope(
+                    "rpc", clock=self._cp.clock.monotonic))
 
     # -- hop adapter -----------------------------------------------------------
 
@@ -351,6 +417,13 @@ class GTRACPipelineServer:
         t_start = self.bed.now
         route_fn = ALGORITHMS[self.algorithm]
         executor = ChainExecutor(self.gcfg, self._hop_fn(request_id))
+        tr = self.tracer
+        traced = tr.enabled
+        rsp = None
+        if traced:
+            executor.tracer = tr
+            rsp = tr.begin("request", cat="request", t0=t_start,
+                           rid=request_id)
 
         for _ in range(max_new_tokens):
             table = self._sync_and_view()
@@ -367,6 +440,7 @@ class GTRACPipelineServer:
             if not route.feasible:
                 metrics.infeasible += 1
                 break
+            t_tok = self.bed.now
             report, payload = executor.execute(route.chain, table,
                                                payload=(tokens, None),
                                                plan=plan)
@@ -375,6 +449,13 @@ class GTRACPipelineServer:
             metrics.repairs += int(report.repaired)
             metrics.rerouted += int(report.repaired)
             self.bed.advance(report.total_latency_ms / 1e3)
+            if traced:
+                ssp = tr.add("decode.step", t_tok, self.bed.now,
+                             cat="decode", parent=rsp, rid=request_id,
+                             emitted=report.success,
+                             first_token=(report.success
+                                          and metrics.ttft_ms < 0))
+                self._trace_hops(ssp, t_tok, report)
             if not report.success:
                 metrics.failures += 1
                 break
@@ -394,31 +475,33 @@ class GTRACPipelineServer:
                 metrics.ttft_ms = (self.bed.now - t_start) * 1e3
         self.bed.peers and [p.forget_request(request_id)
                             for p in self.bed.peers.values()]
-        self._mirror_relay_stats(metrics)
+        if traced:
+            tr.end(rsp, t1=self.bed.now, ttft_ms=metrics.ttft_ms,
+                   stale_rounds_max=metrics.stale_rounds_max)
+        self._fill_stream_metrics(metrics)
         return np.asarray(tokens[0, len(prompt):]), metrics
 
-    def _mirror_relay_stats(self, metrics: ServeMetrics) -> None:
-        """Surface cumulative relay-plane totals on a stream's metrics."""
-        if self.gossip is not None and self.gossip.relay is not None:
-            rs = self.gossip.relay.stats
-            metrics.relay_msgs = rs.msgs + rs.summaries
-            metrics.relay_bytes = rs.seeker_wire_bytes()
-            metrics.relay_duplicates = rs.duplicates
-            metrics.relay_digest_mismatches = rs.digest_mismatches
-            metrics.relay_rejected_chains = rs.rejected_chains
-            metrics.relay_quarantines = rs.quarantines
-        self._mirror_control_plane(metrics)
+    def _trace_hops(self, parent, t0: float, report) -> None:
+        """Synthesize per-hop child spans under an exec span from the
+        report's drawn latencies — hop latencies tile the step exactly
+        (sum == total_latency_ms), so the serving hot path never reads
+        the clock per hop."""
+        tr = self.tracer
+        t = t0
+        for h in report.hops:
+            t1 = t + h.latency_ms / 1e3
+            tr.add("hop", t, t1, cat="exec", parent=parent,
+                   peer=h.peer_id, ok=h.success)
+            t = t1
 
-    def _mirror_control_plane(self, metrics: ServeMetrics) -> None:
-        """Surface cumulative composer health totals on a stream's
-        metrics (process control plane only)."""
-        if self._cp is None:
-            return
-        h = self._cp.health
-        metrics.shard_rpc_retries = h.rpc_retries
-        metrics.shard_timeouts = h.rpc_timeouts
-        metrics.degraded_windows = h.degraded_windows
-        metrics.worker_restarts = h.worker_restarts
+    def _fill_stream_metrics(self, metrics: ServeMetrics) -> None:
+        """Surface cumulative relay-plane / composer-health totals on a
+        stream's metrics from ONE registry snapshot (``_STREAM_VIEW``).
+        Fields whose owning layer is absent keep their defaults."""
+        snap = self.obs.snapshot()
+        for name, keys in _STREAM_VIEW:
+            if all(k in snap for k in keys):
+                setattr(metrics, name, sum(snap[k] for k in keys))
 
     def close(self) -> None:
         """Release control-plane resources (shard worker processes).
@@ -458,6 +541,8 @@ class GTRACPipelineServer:
             self.gcfg, hop,
             quantile_factor=self.gcfg.hedge_quantile_factor)
             if self.gcfg.hedge_enabled else ChainExecutor(self.gcfg, hop))
+        if self.tracer.enabled:
+            req.executor.tracer = self.tracer
         return self.admission.submit(req)
 
     def _emit_token(self, req: RoutedRequest, tok: int,
@@ -482,6 +567,11 @@ class GTRACPipelineServer:
             del self._tok_scale[key]
         for p in self.bed.peers.values():
             p.forget_request(rid)
+        sp = self._req_spans.pop(rid, None)
+        if sp is not None:
+            self.tracer.end(sp, t1=self.bed.now,
+                            ttft_ms=req.metrics.ttft_ms,
+                            stale_rounds_max=req.metrics.stale_rounds_max)
 
     def _normalized_report(self, request_id: int, report):
         """Anchor-facing copy of ``report`` with every multi-token hop
@@ -534,6 +624,8 @@ class GTRACPipelineServer:
         active: List[RoutedRequest] = []      # decode pool
         prefill: List[RoutedRequest] = []     # dedicated prefill streams
         gcfg = self.gcfg
+        tr = self.tracer
+        traced = tr.enabled
         while active or prefill or len(self.admission):
             now = self.bed.now
             # admission sweeps the registry (per-shard fan-out when the
@@ -542,6 +634,14 @@ class GTRACPipelineServer:
                 capacity=self.admission.max_batch - len(active)
                 - len(prefill), now=now)
             served += admitted
+            if traced:
+                for req in admitted:
+                    rsp = tr.begin("request", cat="request",
+                                   t0=req.arrival_time, rid=req.request_id)
+                    self._req_spans[req.request_id] = rsp
+                    if now > req.arrival_time:
+                        tr.add("queue.wait", req.arrival_time, now,
+                               cat="serve", parent=rsp, rid=req.request_id)
             if gcfg.disaggregate:
                 pre, dec = AdmissionQueue.split_by_kind(
                     admitted, gcfg.prefill_chunk_tokens)
@@ -597,6 +697,9 @@ class GTRACPipelineServer:
                     break
                 self.bed.advance(min(targets) - now)
                 continue
+            wsp = (tr.begin("serve.window", cat="window", t0=now, push=True,
+                            decode=len(active), prefill_launches=len(chunks))
+                   if traced else None)
             table = self._sync_and_view()
             self.kv.validate(table, gcfg.trust_floor)
             stale_rounds = (int(self.sync_seeker.staleness_rounds(
@@ -617,10 +720,25 @@ class GTRACPipelineServer:
                     req.done = True
                     continue
                 end = req.prefill_pos + c
+                prev_busy = req.busy_until
                 report, out = req.executor.execute(
                     plan.chain_ids(0), table,
                     payload=(req.tokens[:, :end], None), plan=plan)
                 self._apply_report(req, report)
+                if traced:
+                    psp = self._req_spans.get(req.request_id)
+                    if now - prev_busy > 1e-12:
+                        # window-cadence gap between the previous chunk
+                        # completing and this launch
+                        tr.add("prefill.stall", prev_busy, now,
+                               cat="prefill", parent=psp,
+                               rid=req.request_id)
+                    csp = tr.add("prefill.chunk", now,
+                                 now + report.total_latency_ms / 1e3,
+                                 cat="prefill", parent=psp,
+                                 rid=req.request_id, tokens=c,
+                                 ok=report.success)
+                    self._trace_hops(csp, now, report)
                 if not report.success:
                     req.metrics.failures += 1
                     req.done = True
@@ -636,6 +754,7 @@ class GTRACPipelineServer:
                     req._pending_tok = int(jnp.argmax(logits[:, -1, :], -1)[0])
             # -- decode window: one token per stream --------------------
             window_ms = 0.0
+            w_spans: List[Tuple[object, float]] = []
             for req in active:
                 plan = plans[req.request_id]
                 if not plan.feasible:
@@ -648,6 +767,16 @@ class GTRACPipelineServer:
                     plan=plan)
                 self._apply_report(req, report)
                 window_ms = max(window_ms, report.total_latency_ms)
+                if traced:
+                    ssp = tr.add("decode.step", now,
+                                 now + report.total_latency_ms / 1e3,
+                                 cat="decode",
+                                 parent=self._req_spans.get(req.request_id),
+                                 rid=req.request_id, emitted=report.success,
+                                 first_token=(report.success
+                                              and req.metrics.ttft_ms < 0))
+                    self._trace_hops(ssp, now, report)
+                    w_spans.append((ssp, report.total_latency_ms))
                 if not report.success:
                     req.metrics.failures += 1
                     req.done = True
@@ -670,6 +799,14 @@ class GTRACPipelineServer:
             # decode streams run concurrently: the clock advances by the
             # window's max decode latency; a pure-prefill window advances
             # to its earliest chunk completion instead
+            if traced:
+                # drag: the batch-synchronization gap between a stream's
+                # own step finishing and the window's max latency — it
+                # delays the stream's NEXT token, so ITL_k+1 = exec_k+1 +
+                # drag_k (obs.report.itl_breakdown). Known only once the
+                # window closes, hence the late stamp.
+                for ssp, own in w_spans:
+                    ssp.set(drag_ms=window_ms - own)
             if active:
                 self.bed.advance(window_ms / 1e3)
             elif chunks:
@@ -679,6 +816,8 @@ class GTRACPipelineServer:
                          if not r.done and r.busy_until > now]
                 self.bed.advance((min(waits) - now) if waits
                                  else fail_ms / 1e3)
+            if traced:
+                tr.end(wsp, t1=self.bed.now, window_ms=window_ms)
             for req in active:
                 if req.done:
                     self._finish_stream(req)
@@ -688,5 +827,5 @@ class GTRACPipelineServer:
             active = [r for r in active if not r.done]
             prefill = [r for r in prefill if not r.done]
         for req in served:
-            self._mirror_relay_stats(req.metrics)
+            self._fill_stream_metrics(req.metrics)
         return served

@@ -28,6 +28,7 @@ has aged out of the history get a full shard snapshot instead.
 """
 from __future__ import annotations
 
+import time as _time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import GTRACConfig
 from repro.core.types import RegistryState
+from repro.obs.trace import NOOP_TRACER
 from repro.sync.delta import HEADER_BYTES, DeltaGapError, ShardDelta, full_delta, make_delta
 from repro.sync.relay import RelayPlane
 from repro.sync.seeker import SeekerCache
@@ -205,6 +207,11 @@ class GossipScheduler:
     state seeker→seeker; anchor cost per round is O(fanout), not
     O(seekers)."""
 
+    #: sim-domain tracer: rounds are instantaneous in sim time, so a
+    #: round span is zero-duration at ``now`` with the actual shipping
+    #: work recorded as wall_us on the per-ship events beneath it
+    tracer = NOOP_TRACER
+
     def __init__(self, publisher: GossipPublisher,
                  seekers: Sequence[SeekerCache],
                  cfg: Optional[GTRACConfig] = None,
@@ -318,28 +325,36 @@ class GossipScheduler:
         when the relay plane is on."""
         self._last_round = now
         self.stats.rounds += 1
-        registry_poke_liveness(self.publisher.registry, now)
-        vv = self.publisher.version_vector()
-        n = self.publisher.n_shards
-        cfg = self.publisher.cfg
-        refresh_s = cfg.gossip_hb_refresh_frac * cfg.node_ttl_s
-        if self.relay is None:
-            targets, shard_cap = self.seekers, self.fanout
-        else:
-            # seeds pull every reachable dirty shard: anchor cost stays
-            # O(fanout seekers), and a fully-fresh seed is what makes
-            # the epidemic converge in O(log N) rounds
-            targets, shard_cap = self._seed_seekers(n), n
-        # the attestation payload riding every anchor sighting
-        # (registry-cached per shard version — O(S) on clean rounds)
-        dv = (self.publisher.digest_vector()
-              if self.relay is not None else None)
-        for seeker in targets:
-            self._anchor_round(seeker, vv, dv, n, now, refresh_s,
-                               shard_cap)
-        if self.relay is not None:
-            self.relay.round(self.seekers, now,
-                             anchor_pull=self._relay_pull)
+        tr = self.tracer
+        sp = (tr.begin("gossip.round", cat="gossip", t0=now, push=True,
+                       round=self.stats.rounds) if tr.enabled else None)
+        targets: Sequence[SeekerCache] = ()
+        try:
+            registry_poke_liveness(self.publisher.registry, now)
+            vv = self.publisher.version_vector()
+            n = self.publisher.n_shards
+            cfg = self.publisher.cfg
+            refresh_s = cfg.gossip_hb_refresh_frac * cfg.node_ttl_s
+            if self.relay is None:
+                targets, shard_cap = self.seekers, self.fanout
+            else:
+                # seeds pull every reachable dirty shard: anchor cost
+                # stays O(fanout seekers), and a fully-fresh seed is
+                # what makes the epidemic converge in O(log N) rounds
+                targets, shard_cap = self._seed_seekers(n), n
+            # the attestation payload riding every anchor sighting
+            # (registry-cached per shard version — O(S) on clean rounds)
+            dv = (self.publisher.digest_vector()
+                  if self.relay is not None else None)
+            for seeker in targets:
+                self._anchor_round(seeker, vv, dv, n, now, refresh_s,
+                                   shard_cap)
+            if self.relay is not None:
+                self.relay.round(self.seekers, now,
+                                 anchor_pull=self._relay_pull)
+        finally:
+            if sp is not None:
+                tr.end(sp, t1=now, targets=len(targets))
 
     def _seed_seekers(self, n_shards: int) -> List[SeekerCache]:
         """This round's anchor-push seeds: ``gossip_fanout`` seekers in
@@ -406,6 +421,8 @@ class GossipScheduler:
         return True
 
     def _ship(self, seeker: SeekerCache, shard: int, now: float) -> None:
+        traced = self.tracer.enabled
+        wall0 = _time.perf_counter() if traced else 0.0
         if self.relay is not None:
             # a ship IS direct anchor contact: refresh the seeker's
             # attestation store first, so what it is about to apply —
@@ -430,6 +447,12 @@ class GossipScheduler:
         else:
             self.stats.deltas += 1
             self.stats.delta_bytes += delta.wire_bytes()
+        if traced:
+            self.tracer.event(
+                "gossip.delta", cat="gossip", t=now, shard=shard,
+                seeker=seeker.source_id, bytes=delta.wire_bytes(),
+                full=delta.is_full,
+                wall_us=(_time.perf_counter() - wall0) * 1e6)
         if self.verify and \
                 seeker.shard_digest(shard) != self.publisher.digest(shard):
             # the shipped-to mirror contradicts the root of trust: its
@@ -438,6 +461,10 @@ class GossipScheduler:
             # repair this — the version contract assumes identical rows
             # — so the mirror is invalidated and re-adopted wholesale.
             self.stats.digest_mismatches += 1
+            if traced:
+                self.tracer.event("gossip.digest_mismatch", cat="gossip",
+                                  t=now, shard=shard,
+                                  seeker=seeker.source_id)
             seeker.invalidate_shard(shard)
             full = self.publisher.full(shard)
             seeker.apply(full, now)

@@ -72,6 +72,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 import numpy as np
 
 from repro.configs.base import GTRACConfig
+from repro.obs.trace import NOOP_TRACER
 from repro.sync.delta import HEADER_BYTES, ShardDelta, full_delta
 from repro.sync.seeker import SeekerCache
 
@@ -379,6 +380,10 @@ FaultHook = Callable[[Union[RelayMessage, RelaySummary], SeekerCache],
 class RelayPlane:
     """Topology + per-seeker relay nodes + one-round drive."""
 
+    #: sim-domain tracer (rounds and handshakes are instantaneous in
+    #: sim time — markers carry the payload sizes and verdicts)
+    tracer = NOOP_TRACER
+
     def __init__(self, cfg: GTRACConfig, fanout: Optional[int] = None,
                  seed: Optional[int] = None,
                  stats: Optional[RelayStats] = None):
@@ -429,18 +434,26 @@ class RelayPlane:
         ttl = float(self.cfg.node_ttl_s)
         nbrs = self.topology.neighbors(n, self._round)
         self._round += 1
-        if self.handshake:
-            summaries = [self.node(sk).summary(now) for sk in seekers]
-            for i, sk in enumerate(seekers):
-                for j in nbrs[i]:
-                    self.exchange(summaries[i], self.node(sk),
-                                  seekers[int(j)], now, anchor_pull)
-        else:
-            msgs = [self.node(sk).message(now, ttl) for sk in seekers]
-            for i, sk in enumerate(seekers):
-                for j in nbrs[i]:
-                    self.deliver(msgs[i], self.node(sk), seekers[int(j)],
-                                 now, anchor_pull)
+        tr = self.tracer
+        sp = (tr.begin("relay.round", cat="relay", t0=now, push=True,
+                       round=self.stats.rounds, seekers=n,
+                       handshake=self.handshake) if tr.enabled else None)
+        try:
+            if self.handshake:
+                summaries = [self.node(sk).summary(now) for sk in seekers]
+                for i, sk in enumerate(seekers):
+                    for j in nbrs[i]:
+                        self.exchange(summaries[i], self.node(sk),
+                                      seekers[int(j)], now, anchor_pull)
+            else:
+                msgs = [self.node(sk).message(now, ttl) for sk in seekers]
+                for i, sk in enumerate(seekers):
+                    for j in nbrs[i]:
+                        self.deliver(msgs[i], self.node(sk),
+                                     seekers[int(j)], now, anchor_pull)
+        finally:
+            if sp is not None:
+                tr.end(sp, t1=now)
 
     # -- handshake -----------------------------------------------------------
 
@@ -466,6 +479,11 @@ class RelayPlane:
             return
         st.summaries += 1
         st.summary_bytes += summary.wire_bytes()
+        if self.tracer.enabled:
+            self.tracer.event("relay.handshake", cat="relay", t=now,
+                              sender=summary.sender_id,
+                              receiver=receiver.source_id,
+                              bytes=summary.wire_bytes())
         if node.observe_relayed(summary.vv_obs, summary.vv_obs_time,
                                 summary.vv_obs_digests):
             st.vv_forwarded += 1
@@ -486,7 +504,7 @@ class RelayPlane:
                 if receiver.shard_digest(s) == att:
                     # receiver provably holds anchor state; the sender's
                     # contradicting claim is a lie
-                    self._quarantine(node, summary.sender_id)
+                    self._quarantine(node, summary.sender_id, now=now)
                     break
                 elif anchor_pull is not None and \
                         anchor_pull(receiver, s, now):
@@ -526,6 +544,11 @@ class RelayPlane:
             return
         st.msgs += 1
         st.msg_bytes += msg.wire_bytes()
+        if self.tracer.enabled:
+            self.tracer.event("relay.deliver", cat="relay", t=now,
+                              sender=msg.sender_id,
+                              receiver=receiver.source_id,
+                              bytes=msg.wire_bytes())
         if node.observe_relayed(msg.vv_obs, msg.vv_obs_time,
                                 msg.vv_obs_digests):
             st.vv_forwarded += 1
@@ -594,8 +617,13 @@ class RelayPlane:
                 receiver.restore(s, token)
                 st.digest_mismatches += 1
                 st.rejected_chains += len(applied)
+                if self.tracer.enabled:
+                    self.tracer.event("relay.reject", cat="relay", t=now,
+                                      shard=s, sender=msg.sender_id,
+                                      receiver=receiver.source_id,
+                                      chains=len(applied))
                 if base_verified:
-                    self._quarantine(node, msg.sender_id)
+                    self._quarantine(node, msg.sender_id, now=now)
                 if anchor_pull is not None and \
                         anchor_pull(receiver, s, now):
                     st.mismatch_repairs += 1
@@ -617,7 +645,7 @@ class RelayPlane:
                         # monotonic, so the claim is fabricated (this is
                         # what bounds the repair-bait DoS: one wasted
                         # pull per quarantine sentence, not per round)
-                        self._quarantine(node, msg.sender_id)
+                        self._quarantine(node, msg.sender_id, now=now)
                         continue
                 else:
                     self._peer_full_sync(sender, receiver, s,
@@ -649,9 +677,16 @@ class RelayPlane:
                 if not adopted:
                     st.wasted_bytes += int(col.nbytes)
 
-    def _quarantine(self, node: RelayNode, sender_id: int) -> None:
+    def _quarantine(self, node: RelayNode, sender_id: int,
+                    now: Optional[float] = None) -> None:
         node.quarantine(sender_id, self._round + self.quarantine_rounds)
         self.stats.quarantines += 1
+        if self.tracer.enabled:
+            self.tracer.event("relay.quarantine", cat="relay", t=now,
+                              sender=sender_id,
+                              receiver=node.seeker.source_id,
+                              until_round=self._round
+                              + self.quarantine_rounds)
 
     def _peer_full_sync(self, sender: RelayNode, receiver: SeekerCache,
                         shard: int, sender_id: int) -> None:
