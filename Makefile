@@ -32,7 +32,13 @@
 #                       --trace): exports /tmp/edge_trace.jsonl,
 #                       schema-validates it, prints the critical-path
 #                       report, asserts the TTFT decomposition identity
-#   make lint           compile-check + ruff (pyflakes fallback). HARD
+#   make analyze        repo-specific AST invariant linter (repolint):
+#                       python -m repro.analysis src/repro under the
+#                       checked-in allow-list (repolint.json). Stdlib
+#                       only — no installs needed; findings fail with
+#                       file:line output
+#   make lint           compile-check + `make analyze` + ruff (pyflakes
+#                       fallback). The generic-linter half is a HARD
 #                       dependency: fails if neither linter is installed —
 #                       pip install -r requirements-dev.txt
 #
@@ -45,7 +51,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test bench-routing bench-serving bench-sharding bench-sync \
-	bench-control-plane bench-smoke trace-demo lint
+	bench-control-plane bench-smoke trace-demo analyze lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -76,7 +82,10 @@ bench-smoke:
 	$(PY) -m benchmarks.bench_sync --quick
 	$(PY) -m benchmarks.bench_control_plane --quick
 
-lint:
+analyze:
+	$(PY) -m repro.analysis src/repro
+
+lint: analyze
 	$(PY) -m compileall -q src benchmarks tests examples
 	@if $(PY) -c "import ruff" >/dev/null 2>&1; then \
 	    $(PY) -m ruff check src benchmarks tests examples; \

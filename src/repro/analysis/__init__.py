@@ -1,0 +1,34 @@
+"""repro.analysis — repo-specific AST invariant linter ("repolint").
+
+Mechanizes the invariants PRs 5–9 established by hand: clock
+discipline, RNG discipline, state-aliasing hygiene, the registry
+version-bump contract, tracer hot-path guards, and wire-safe RPC
+payloads. See ``python -m repro.analysis --list-rules``.
+"""
+from repro.analysis.core import (
+    AllowEntry,
+    Config,
+    ConfigError,
+    FileContext,
+    Finding,
+    Rule,
+    RunReport,
+    Walker,
+    analyze_file,
+    analyze_paths,
+    find_config,
+    load_config,
+    scan_suppressions,
+)
+from repro.analysis.registry_contract import (
+    registry_mutator_info,
+    registry_mutators,
+)
+from repro.analysis.rules import ALL_RULES, build_rules
+
+__all__ = [
+    "ALL_RULES", "AllowEntry", "Config", "ConfigError", "FileContext",
+    "Finding", "Rule", "RunReport", "Walker", "analyze_file",
+    "analyze_paths", "build_rules", "find_config", "load_config",
+    "registry_mutator_info", "registry_mutators", "scan_suppressions",
+]

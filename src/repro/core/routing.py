@@ -204,7 +204,9 @@ def naive_route(table: PeerTable, total_layers: int, cfg: GTRACConfig,
                 deadline_s: Optional[float] = None) -> RouteResult:
     """Naive: DFS-enumerate feasible chains, uniform-sample one (§V-B)."""
     t0 = time.perf_counter()
-    rng = rng or np.random.default_rng()
+    # seeded fallback: an unseeded default_rng() draws OS entropy, which
+    # breaks run-to-run reproducibility of the uniform chain sample
+    rng = rng or np.random.default_rng(0)
     chains = enumerate_chains(table, table.alive, total_layers, limit=limit,
                               deadline_s=deadline_s)
     if not chains:

@@ -83,8 +83,7 @@ def pipeline_shard_map(stage_fn: Callable, mesh: Mesh, n_microbatches: int,
     activations advance one stage per tick via ppermute. XLA overlaps the
     permute with the next tick's compute (async collective start/done).
     """
-    S = mesh_stage_size = dict(
-        zip(mesh.axis_names, mesh.devices.shape))[stage_axis]
+    S = dict(zip(mesh.axis_names, mesh.devices.shape))[stage_axis]
 
     def pipelined(x):
         from repro.distributed.compat import shard_map_nocheck
@@ -122,7 +121,7 @@ def pipeline_shard_map(stage_fn: Callable, mesh: Mesh, n_microbatches: int,
             # psum replicates them so out_specs=P(None...) is honest
             return jax.lax.psum(out, stage_axis)
 
-        spec = P(None, None)  # microbatches replicated per stage group
+        # microbatches replicated per stage group
         return shard_map_nocheck(per_stage, mesh=mesh,
                                  in_specs=P(*([None] * x.ndim)),
                                  out_specs=P(*([None] * x.ndim)))(x)

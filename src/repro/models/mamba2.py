@@ -81,7 +81,6 @@ def ssd_chunked(x, dt, la, Bm, Cm, h0, chunk: int = CHUNK):
     Bm, Cm (B,S,N); h0 (B,H,N,P). Returns y (B,S,H,P), h_final.
     """
     Bz, S, H, P = x.shape
-    N = Bm.shape[-1]
     assert S % chunk == 0, (S, chunk)
     n = S // chunk
     r = lambda a: a.reshape(Bz, n, chunk, *a.shape[2:]).swapaxes(0, 1)

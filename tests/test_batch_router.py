@@ -168,9 +168,8 @@ class TestWindowedServer:
         cfg, model, params = tiny
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"golden": 2}, seed=0)
-        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
-                              max_new_tokens=5))
-                for _ in range(3)]
+        for _ in range(3):
+            srv.submit(SubmitSpec(prompt=np.arange(1, 9), max_new_tokens=5))
         done = srv.run_queue()
         want = monolithic_greedy(cfg, model, params, np.arange(1, 9), 5)
         assert len(done) == 3
@@ -190,9 +189,8 @@ class TestWindowedServer:
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"honeypot": 2, "golden": 2},
                                   seed=1)
-        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
-                              max_new_tokens=4))
-                for _ in range(6)]
+        for _ in range(6):
+            srv.submit(SubmitSpec(prompt=np.arange(1, 9), max_new_tokens=4))
         done = srv.run_queue()
         ok = sum(r.metrics.tokens == 4 for r in done)
         assert ok >= 4       # trust learning + plan splicing keep serving
@@ -204,9 +202,8 @@ class TestWindowedServer:
         gcfg = GTRACConfig(router_max_batch=2)
         srv = GTRACPipelineServer(cfg, params, layers_per_stage=2,
                                   replicas={"golden": 2}, gcfg=gcfg, seed=0)
-        reqs = [srv.submit(SubmitSpec(prompt=np.arange(1, 9),
-                              max_new_tokens=3))
-                for _ in range(5)]
+        for _ in range(5):
+            srv.submit(SubmitSpec(prompt=np.arange(1, 9), max_new_tokens=3))
         done = srv.run_queue()
         assert len(done) == 5
         assert all(r.metrics.tokens == 3 for r in done)
@@ -236,7 +233,8 @@ class TestWindowedServer:
 class TestAdmissionQueue:
     def test_fifo_windows(self):
         q = AdmissionQueue(max_batch=3)
-        reqs = [q.submit(Request(i, np.arange(4))) for i in range(7)]
+        for i in range(7):
+            q.submit(Request(i, np.arange(4)))
         w1 = q.next_window()
         assert [r.request_id for r in w1] == [0, 1, 2]
         w2 = q.next_window(capacity=1)

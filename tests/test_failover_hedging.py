@@ -67,7 +67,6 @@ class TestReplicatedAnchor:
         r = gtrac_route(cache.view(), 6, gcfg, tau=0.0)
         assert r.feasible
         ra.maybe_failover(now=100.0)
-        cache2 = SeekerCache(ra.primary, gcfg, now=100.0)
         # registry state carried over but heartbeats are stale (TTL) —
         # peers re-heartbeat to the new primary and recover
         for pid in range(6):
@@ -178,7 +177,6 @@ class TestHedging:
 
     def test_tail_latency_improves_under_stragglers(self, gcfg):
         """P99 with hedging < without, on a lognormal-tailed peer pool."""
-        rng = np.random.default_rng(0)
         t = self._table(gcfg, [100.0] * 4)
 
         def make_hop(seed):

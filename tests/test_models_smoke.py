@@ -88,7 +88,6 @@ def test_decode_matches_forward(arch):
     batch, pf = make_inputs(cfg, B, S + T)
     tokens = batch["tokens"]
     # full forward logits at positions S-1 .. S+T-2 == prefill+decode chain
-    full_batch = dict(batch)
     pf_full = dict(pf)
     pf_full["tokens"] = tokens
     logits_full, _ = model.prefill(params, **pf_full)  # last position only
@@ -138,8 +137,6 @@ def test_mrope_degenerates_to_rope_for_text():
     pos = jnp.arange(S)[None, :].repeat(B, 0)
     a1 = positional_angles(cfg, pos)              # mrope, text-only
     a2 = positional_angles(cfg_rope, pos)         # plain rope
-    idx = jnp.argsort(jnp.concatenate([                     # section perm
-        jnp.arange(0, cfg.head_dim // 2)]))
     # same multiset of frequencies; compare sorted spectra per position
     np.testing.assert_allclose(np.sort(np.asarray(a1), -1),
                                np.sort(np.asarray(a2), -1), rtol=1e-6)

@@ -88,6 +88,15 @@ class TestBaselines:
         r = naive_route(t, 12, gcfg, rng=np.random.default_rng(0))
         assert r.feasible and r.hops >= 2
 
+    def test_naive_default_rng_is_deterministic(self, gcfg, layered_anchor):
+        # regression (repolint rng-discipline): the fallback RNG used to
+        # be an unseeded default_rng(), so two identical calls could
+        # sample different chains — run-to-run irreproducibility
+        t = table_of(layered_anchor)
+        a = naive_route(t, 12, gcfg)
+        b = naive_route(t, 12, gcfg)
+        assert a.chain == b.chain and a.total_cost == b.total_cost
+
     def test_larac_meets_constraint_when_feasible(self, gcfg):
         anchor = build_layered_anchor(gcfg, trust_range=(0.9, 1.0))
         t = table_of(anchor)

@@ -378,42 +378,106 @@ class TestChurn:
 # Version-bump contract (the signal the gossip sync plane keys on)
 # ---------------------------------------------------------------------------
 
-# (name, mutator(reg, now), bumps): every mutating registry API must bump
-# `version` (monolithic) / the per-shard version vector (sharded), and
-# every no-op path must leave it untouched — otherwise delta gossip either
-# misses updates or re-ships clean shards forever.
-VERSION_MUTATORS = [
-    ("set_trust", lambda r, now: r.set_trust(0, 0.42), True),
-    ("set_trust_unknown", lambda r, now: r.set_trust(9_999, 0.42), False),
-    ("reset_trust", lambda r, now: r.reset_trust(), True),
-    ("apply_report_success",
-     lambda r, now: r.apply_report(ExecReport(
-         True, [0, 5], [HopReport(p, 40.0, True) for p in (0, 5)])), True),
-    ("apply_report_failure",
-     lambda r, now: r.apply_report(ExecReport(
-         False, [3], [HopReport(3, 200.0, False)], failed_peer=3)), True),
-    ("apply_report_unknown_peers",
-     lambda r, now: r.apply_report(ExecReport(
-         True, [9_999], [HopReport(9_999, 40.0, True)])), False),
-    ("sweep_expiring",
-     lambda r, now: r.sweep(now + 100.0, expire_after_s=50.0), True),
-    ("sweep_decaying",
-     lambda r, now: r.sweep(now + 1.0, decay_rate=0.5), True),
-    ("sweep_clean", lambda r, now: r.sweep(now + 1.0), False),
-    ("deregister", lambda r, now: r.deregister(1), True),
-    ("deregister_unknown", lambda r, now: r.deregister(9_999), False),
-    ("register_new", lambda r, now: r.register(500, 0, 3, now=now), True),
-    ("heartbeat", lambda r, now: r.heartbeat(0, now + 0.1), False),
-]
+def _adopt_heartbeats(r, now):
+    """Heartbeat-column adoption — the composed registry replicates per
+    shard, so the sharded variant drives shard 0's AnchorRegistry."""
+    target = r if isinstance(r, AnchorRegistry) else r.shards[0]
+    target.adopt_heartbeats(target.export_heartbeats() + 1.0)
+
+
+# Concrete invocations per mutator method: {method: [(id, call, bumps)]}.
+# Every mutating registry API must bump `version` (monolithic) / the
+# per-shard version vector (sharded), and every no-op path must leave it
+# untouched — otherwise delta gossip either misses updates or re-ships
+# clean shards forever. COVERAGE is no longer hand-kept: the key set is
+# checked against the analyzer-derived mutator set (repro.analysis
+# classifies AnchorRegistry's AST), so a new mutating method fails
+# test_covers_every_analyzer_derived_mutator until a scenario lands here.
+MUTATOR_SCENARIOS = {
+    "set_trust": [
+        ("set_trust", lambda r, now: r.set_trust(0, 0.42), True),
+        ("set_trust_unknown", lambda r, now: r.set_trust(9_999, 0.42),
+         False),
+    ],
+    "reset_trust": [
+        ("reset_trust", lambda r, now: r.reset_trust(), True),
+    ],
+    "apply_report": [
+        ("apply_report_success",
+         lambda r, now: r.apply_report(ExecReport(
+             True, [0, 5],
+             [HopReport(p, 40.0, True) for p in (0, 5)])), True),
+        ("apply_report_failure",
+         lambda r, now: r.apply_report(ExecReport(
+             False, [3], [HopReport(3, 200.0, False)], failed_peer=3)),
+         True),
+        ("apply_report_unknown_peers",
+         lambda r, now: r.apply_report(ExecReport(
+             True, [9_999], [HopReport(9_999, 40.0, True)])), False),
+    ],
+    "sweep": [
+        ("sweep_expiring",
+         lambda r, now: r.sweep(now + 100.0, expire_after_s=50.0), True),
+        ("sweep_decaying",
+         lambda r, now: r.sweep(now + 1.0, decay_rate=0.5), True),
+        ("sweep_clean", lambda r, now: r.sweep(now + 1.0), False),
+    ],
+    "deregister": [
+        ("deregister", lambda r, now: r.deregister(1), True),
+        ("deregister_unknown", lambda r, now: r.deregister(9_999), False),
+    ],
+    "register": [
+        ("register_new", lambda r, now: r.register(500, 0, 3, now=now),
+         True),
+    ],
+    "heartbeat": [
+        ("heartbeat", lambda r, now: r.heartbeat(0, now + 0.1), False),
+    ],
+    "adopt_state": [
+        ("adopt_state_roundtrip",
+         lambda r, now: r.adopt_state(r.export_state()), True),
+    ],
+    "adopt_heartbeats": [
+        ("adopt_heartbeats", _adopt_heartbeats, False),
+    ],
+}
+
+_CASES = [(method, sid, call, bumps)
+          for method, scenarios in sorted(MUTATOR_SCENARIOS.items())
+          for sid, call, bumps in scenarios]
 
 
 class TestVersionBumpContract:
+    def test_covers_every_analyzer_derived_mutator(self):
+        """The scenario table and the static analyzer must agree on what
+        a mutator is — the hand-kept list this replaces let new mutators
+        silently dodge the contract."""
+        from repro.analysis import registry_mutators
+        derived = registry_mutators()
+        assert set(MUTATOR_SCENARIOS) == set(derived), (
+            f"scenario table out of sync with AnchorRegistry: "
+            f"missing={sorted(set(derived) - set(MUTATOR_SCENARIOS))} "
+            f"stale={sorted(set(MUTATOR_SCENARIOS) - set(derived))}")
+
+    def test_bump_expectations_match_classifier(self):
+        """Heartbeat-only mutators never bump; every other mutator has at
+        least one scenario that must."""
+        from repro.analysis import registry_mutator_info
+        info = registry_mutator_info()
+        for method, scenarios in MUTATOR_SCENARIOS.items():
+            if info[method].heartbeat_only:
+                assert not any(b for _, _, b in scenarios), \
+                    f"{method} is heartbeat-exempt but a scenario bumps"
+            else:
+                assert any(b for _, _, b in scenarios), \
+                    f"{method} mutates records but no scenario bumps"
+
     @pytest.mark.parametrize("shards", [1, 4])
     @pytest.mark.parametrize(
-        "name,mutate,bumps", VERSION_MUTATORS,
-        ids=[m[0] for m in VERSION_MUTATORS])
+        "method,name,mutate,bumps", _CASES, ids=[c[1] for c in _CASES])
     def test_mutators_bump_versions_noops_do_not(self, gcfg, shards,
-                                                 name, mutate, bumps):
+                                                 method, name, mutate,
+                                                 bumps):
         from repro.sync.gossip import registry_version_vector
         reg = make_registry(gcfg, shards=shards)
         populate(reg)

@@ -68,7 +68,6 @@ class TestWorkload:
                          request_id_base=100)
         assert g.ssr > s.ssr
         # honeypots that failed must sit below the trust floor now
-        t = bed.anchor.snapshot(bed.now)
         struck = [r for r in bed.anchor.peers.values() if r.failures > 0]
         assert struck, "workload should have triggered failures"
         assert all(r.trust < bed.cfg.trust_floor for r in struck)
